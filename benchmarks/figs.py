@@ -1,0 +1,270 @@
+"""Benchmark implementations: one function per paper table/figure.
+
+Each returns (rows, derived) where rows are CSV-able dicts and `derived`
+is the headline number validated against the paper's claim.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Fig 1: 27-region average carbon-intensity + CoV, tier structure
+# ---------------------------------------------------------------------------
+
+def fig1_regions():
+    from repro.carbon.regions import REGIONS, tier_means, tier_of
+    rows = [{"region": r.name, "avg_g_kwh": r.avg, "cov": r.cov,
+             "tier": tier_of(r.cov)}
+            for r in sorted(REGIONS.values(), key=lambda x: x.cov)]
+    means = tier_means()
+    avgs = [r.avg for r in REGIONS.values()]
+    derived = {
+        "n_regions": len(rows),
+        "spread_x": max(avgs) / min(avgs),                  # paper: >500x
+        "frac_low_cov": np.mean([r.cov < 0.05 for r in REGIONS.values()]),
+        "tier_mean_low": means["low"],                      # paper: 551
+        "tier_mean_mid": means["mid"],                      # paper: 344
+        "tier_mean_high": means["high"],                    # paper: 189
+    }
+    return rows, derived
+
+
+# ---------------------------------------------------------------------------
+# Fig 2: representative region traces (low/mid/high CoV over 96 h)
+# ---------------------------------------------------------------------------
+
+def fig2_traces():
+    from repro.carbon.traces import synth_trace, trace_cov
+    from repro.carbon.regions import REGIONS
+    rows = []
+    derived = {}
+    for name in ("PL", "NL", "CAISO"):
+        tr = synth_trace(name, hours=96, seed=0)
+        for h, v in enumerate(tr):
+            rows.append({"region": name, "hour": h, "g_kwh": float(v)})
+        derived[f"{name}_cov"] = trace_cov(synth_trace(name, hours=24 * 365))
+        derived[f"{name}_target_cov"] = REGIONS[name].cov
+    return rows, derived
+
+
+# ---------------------------------------------------------------------------
+# Fig 3: Azure-like VM population CoV mixture
+# ---------------------------------------------------------------------------
+
+def fig3_workload(n_vms: int = 300):
+    from repro.workload.azure_like import population_stats, sample_population
+    pop = sample_population(n_vms, days=3, seed=0)
+    stats = population_stats(pop)
+    rows = [{"vm": i, "mean_util": t.mean, "cov": t.cov}
+            for i, t in enumerate(pop)]
+    # paper: 8% below 0.25, >50% above 0.4, 30% above 1.0, 43% mean<10%
+    return rows, stats
+
+
+# ---------------------------------------------------------------------------
+# Fig 6: power-model linearity + calibration
+# ---------------------------------------------------------------------------
+
+def fig6_power():
+    from repro.power.model import (LinearPowerModel, calibrate_linear,
+                                   component_power_sweep)
+    truth = LinearPowerModel(100.0, 200.0)
+    sweep = component_power_sweep(truth, seed=0)
+    model, r2 = calibrate_linear(sweep["util"], sweep["cpu"])
+    rows = [{"util": u, **{c: sweep[c][i] for c in
+                           ("cpu", "memory", "disk", "network")}}
+            for i, u in enumerate(sweep["util"])]
+    dyn_range = {c: max(sweep[c]) - min(sweep[c])
+                 for c in ("cpu", "memory", "disk", "network")}
+    return rows, {"fit_base_w": model.base_w, "fit_peak_w": model.peak_w,
+                  "r2": r2, **{f"dyn_range_{k}": v for k, v in dyn_range.items()}}
+
+
+# ---------------------------------------------------------------------------
+# Fig 7: migration time vs state size — measured on our checkpoint path
+# ---------------------------------------------------------------------------
+
+def fig7_migration():
+    import os
+    os.environ.setdefault("XLA_FLAGS", "")
+    import tempfile
+    import jax
+    from repro.train import checkpoint as CKPT
+
+    rows = []
+    sizes_mb = [8, 32, 128]
+    times = []
+    for mb in sizes_mb:
+        n = mb * 1024 * 1024 // 4
+        state = {"w": jax.numpy.arange(n, dtype=jax.numpy.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            info = CKPT.save(d, state, step=0)
+            t0 = time.perf_counter()
+            CKPT.load(d, {"w": jax.ShapeDtypeStruct((n,), jax.numpy.float32)})
+            restore_s = time.perf_counter() - t0
+        rows.append({"state_mb": mb, "save_s": info["total_s"],
+                     "restore_s": restore_s,
+                     "total_s": info["total_s"] + restore_s})
+        times.append(info["total_s"] + restore_s)
+    # linearity check (paper: all curves linear in footprint)
+    x = np.array(sizes_mb, dtype=float)
+    y = np.array(times)
+    slope, intercept = np.polyfit(x, y, 1)
+    pred = slope * x + intercept
+    r2 = 1 - np.sum((y - pred) ** 2) / max(np.sum((y - y.mean()) ** 2), 1e-12)
+    # model-side numbers (paper's 7 GB < 2 min claim)
+    from repro.cluster.migration import MigrationCostModel
+    m = MigrationCostModel()
+    return rows, {"linear_r2": r2, "s_per_gb_measured": slope * 1024,
+                  "model_7gb_stop_copy_s": m.stop_and_copy_time(7.0)}
+
+
+# ---------------------------------------------------------------------------
+# Fig 10: prototype timeseries (single container, EE policy)
+# ---------------------------------------------------------------------------
+
+def fig10_prototype():
+    from repro.carbon.intensity import ConstantProvider
+    from repro.cluster.slices import paper_family
+    from repro.core.policy import CarbonContainerPolicy
+    from repro.core.simulator import SimConfig, simulate
+
+    fam = paper_family()
+    # ~1 h at 1-min intervals; carbon steady (as in the paper's Fig 10 run)
+    t = np.arange(60)
+    demand = 0.45 + 0.25 * np.sin(2 * np.pi * t / 40.0) * (t > 10)
+    cfg = SimConfig(target_rate=45.0, interval_s=60.0, record_series=True,
+                    state_gb=0.5)
+    res = simulate(CarbonContainerPolicy(variant="energy"), fam, demand,
+                   ConstantProvider(300.91), cfg)
+    s = res.series
+    rows = [{"t_min": s["t"][i] / 60.0, "carbon_rate": s["carbon_rate"][i],
+             "slice": str(s["slice"][i]), "duty": s["duty"][i],
+             "util": s["util"][i], "demand": s["demand"][i]}
+            for i in range(len(s["t"]))]
+    return rows, {"avg_rate": res.avg_carbon_rate, "target": 45.0,
+                  "migrations": res.migrations,
+                  "under_target": res.avg_carbon_rate <= 45.0}
+
+
+# ---------------------------------------------------------------------------
+# Figs 11-14: policy comparison across targets (high / medium variability)
+# ---------------------------------------------------------------------------
+
+def _policy_sweep(region: str, n_jobs: int, targets, days=7):
+    from repro.carbon.intensity import TraceProvider
+    from repro.cluster.slices import paper_family
+    from repro.core.policy import (CarbonAgnosticPolicy,
+                                   CarbonContainerPolicy,
+                                   SuspendResumePolicy, VScaleOnlyPolicy)
+    from repro.core.simulator import SimConfig, sweep_population
+    from repro.workload.azure_like import sample_population
+
+    fam = paper_family()
+    carbon = TraceProvider.for_region(region, hours=24 * days, seed=1)
+    traces = [t.util for t in sample_population(n_jobs, days=days, seed=2)]
+    policies = {
+        "carbon_agnostic": CarbonAgnosticPolicy,
+        "suspend_resume": SuspendResumePolicy,
+        "vscale_only": lambda: VScaleOnlyPolicy(),
+        "carbon_containers": lambda: CarbonContainerPolicy(variant="energy"),
+    }
+    rows = sweep_population(policies, fam, traces, carbon, targets,
+                            SimConfig(target_rate=0.0))
+    return rows
+
+
+def fig11_12_highvar(n_jobs: int = 40):
+    targets = [20.0, 35.0, 50.0, 65.0, 80.0]
+    rows = _policy_sweep("CAISO", n_jobs, targets)
+    cc = [r for r in rows if r["policy"] == "carbon_containers"]
+    sr = [r for r in rows if r["policy"] == "suspend_resume"]
+    derived = {
+        "cc_all_under_target": all(r["carbon_rate_mean"] <= r["target"] for r in cc),
+        "cc_throttle_mean": np.mean([r["throttle_mean"] for r in cc]),
+        "sr_throttle_mean": np.mean([r["throttle_mean"] for r in sr]),
+        "cc_beats_sr_throttle": all(
+            c["throttle_mean"] <= s["throttle_mean"] + 0.1
+            for c, s in zip(cc, sr)),
+    }
+    return rows, derived
+
+
+def fig13_14_medvar(n_jobs: int = 40):
+    targets = [20.0, 35.0, 50.0, 65.0, 80.0]
+    rows = _policy_sweep("NL", n_jobs, targets)
+    cc = [r for r in rows if r["policy"] == "carbon_containers"]
+    vs = [r for r in rows if r["policy"] == "vscale_only"]
+    derived = {
+        "cc_all_under_target": all(r["carbon_rate_mean"] <= r["target"] for r in cc),
+        "cc_vs_vscale_throttle": [
+            (c["target"], c["throttle_mean"], v["throttle_mean"])
+            for c, v in zip(cc, vs)],
+        "cc_beats_vscale": all(
+            c["throttle_mean"] <= v["throttle_mean"] + 0.5 for c, v in zip(cc, vs)),
+    }
+    return rows, derived
+
+
+# ---------------------------------------------------------------------------
+# Figs 15-17: energy-efficiency vs performance variants + slice residency
+# ---------------------------------------------------------------------------
+
+def fig15_16_variants(n_jobs: int = 30):
+    from repro.carbon.intensity import TraceProvider
+    from repro.cluster.slices import paper_family
+    from repro.core.policy import CarbonContainerPolicy
+    from repro.core.simulator import SimConfig, sweep_population
+    from repro.workload.azure_like import sample_population
+
+    fam = paper_family()
+    targets = [25.0, 45.0, 65.0, 85.0]
+    out_rows = []
+    derived = {}
+    for region in ("CAISO", "NL"):
+        carbon = TraceProvider.for_region(region, hours=24 * 7, seed=1)
+        traces = [t.util for t in sample_population(n_jobs, days=7, seed=2)]
+        rows = sweep_population(
+            {"energy": lambda: CarbonContainerPolicy(variant="energy"),
+             "performance": lambda: CarbonContainerPolicy(variant="performance")},
+            fam, traces, carbon, targets, SimConfig(target_rate=0.0))
+        for r in rows:
+            r["region"] = region
+        out_rows.extend(rows)
+        en = [r for r in rows if r["policy"] == "energy"]
+        pf = [r for r in rows if r["policy"] == "performance"]
+        derived[f"{region}_perf_emits_more"] = all(
+            p["carbon_rate_mean"] >= e["carbon_rate_mean"] - 1e-9
+            for p, e in zip(pf, en))
+        derived[f"{region}_both_under_target"] = all(
+            r["carbon_rate_mean"] <= r["target"] * 1.02 for r in rows)
+    return out_rows, derived
+
+
+def fig17_server_time(n_jobs: int = 30):
+    rows, _ = fig15_16_variants(n_jobs)
+    out = []
+    for r in rows:
+        if r["region"] != "CAISO":
+            continue
+        for sl, frac in sorted(r["time_on_slice"].items()):
+            out.append({"policy": r["policy"], "target": r["target"],
+                        "slice": sl, "frac": frac})
+    big = {}
+    for r in rows:
+        if r["region"] != "CAISO":
+            continue
+        large = sum(v for k, v in r["time_on_slice"].items() if k in ("x2", "x4"))
+        big.setdefault(r["policy"], []).append(large)
+    derived = {"perf_more_time_on_large": float(np.mean(big.get("performance", [0])))
+               >= float(np.mean(big.get("energy", [0])))}
+    return out, derived

@@ -1,0 +1,67 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus writes full row data to
+benchmarks/out/ as CSV for plotting). Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1_regions] [--fast true]
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import sys
+import time
+
+
+def _rows_to_csv(name: str, rows: list):
+    if not rows:
+        return
+    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+    keys = list(rows[0].keys())
+    with open(os.path.join(out_dir, f"{name}.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, keys, extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+
+
+def main() -> None:
+    args = {}
+    argv = sys.argv[1:]
+    for i in range(0, len(argv) - 1, 2):
+        args[argv[i].lstrip("-")] = argv[i + 1]
+    fast = args.get("fast", "false") == "true"
+
+    from benchmarks import figs
+    n_small = 10 if fast else 40
+    entries = [
+        ("fig1_regions", figs.fig1_regions, {}),
+        ("fig2_traces", figs.fig2_traces, {}),
+        ("fig3_workload", figs.fig3_workload, {"n_vms": 60 if fast else 300}),
+        ("fig6_power", figs.fig6_power, {}),
+        ("fig7_migration", figs.fig7_migration, {}),
+        ("fig10_prototype", figs.fig10_prototype, {}),
+        ("fig11_12_highvar", figs.fig11_12_highvar, {"n_jobs": n_small}),
+        ("fig13_14_medvar", figs.fig13_14_medvar, {"n_jobs": n_small}),
+        ("fig15_16_variants", figs.fig15_16_variants, {"n_jobs": max(n_small // 2, 6)}),
+        ("fig17_server_time", figs.fig17_server_time, {"n_jobs": max(n_small // 2, 6)}),
+    ]
+    only = args.get("only")
+
+    print("name,us_per_call,derived")
+    for name, fn, kw in entries:
+        if only and name != only:
+            continue
+        t0 = time.perf_counter()
+        rows, derived = fn(**kw)
+        us = (time.perf_counter() - t0) * 1e6
+        _rows_to_csv(name, rows)
+        compact = json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
+                              for k, v in derived.items()}, default=str)
+        print(f"{name},{us:.0f},{compact}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Large-scale Carbon Containers simulation across regions (paper Figs 11-16
+in miniature): 1000-VM-style population, all four policies, three regions.
+
+    PYTHONPATH=src python examples/simulate_regions.py [--jobs 20]
+"""
+import sys
+
+import numpy as np
+
+from repro.carbon.intensity import TraceProvider
+from repro.cluster.slices import paper_family
+from repro.core.policy import (CarbonAgnosticPolicy, CarbonContainerPolicy,
+                               SuspendResumePolicy, VScaleOnlyPolicy)
+from repro.core.simulator import SimConfig, simulate
+from repro.workload.azure_like import sample_population
+
+
+def main():
+    n_jobs = 20
+    if "--jobs" in sys.argv:
+        n_jobs = int(sys.argv[sys.argv.index("--jobs") + 1])
+    fam = paper_family()
+    traces = [t.util for t in sample_population(n_jobs, days=5, seed=2)]
+    policies = [
+        ("carbon-agnostic", CarbonAgnosticPolicy),
+        ("suspend/resume", SuspendResumePolicy),
+        ("vscale-only", lambda: VScaleOnlyPolicy()),
+        ("CC (energy)", lambda: CarbonContainerPolicy("energy")),
+        ("CC (performance)", lambda: CarbonContainerPolicy("performance")),
+    ]
+    target = 45.0
+    print(f"{n_jobs} jobs x 5 days, C_target = {target} g/hr\n")
+    for region in ("PL", "NL", "CAISO"):
+        carbon = TraceProvider.for_region(region, hours=24 * 5, seed=1)
+        print(f"--- region {region} ---")
+        print(f"  {'policy':18s} {'g/hr':>8s} {'throttle%':>10s} "
+              f"{'migs':>6s} {'susp%':>6s}")
+        for name, mk in policies:
+            rates, thr, migs, susp = [], [], [], []
+            for tr in traces:
+                r = simulate(mk(), fam, tr, carbon,
+                             SimConfig(target_rate=target, state_gb=1.0))
+                rates.append(r.avg_carbon_rate)
+                thr.append(r.avg_throttle_pct)
+                migs.append(r.migrations)
+                susp.append(r.suspended_frac)
+            print(f"  {name:18s} {np.mean(rates):8.2f} {np.mean(thr):10.2f} "
+                  f"{np.mean(migs):6.1f} {100*np.mean(susp):6.1f}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Carbon-intensity data: region statistics, providers, synthetic traces."""
+from repro.carbon.intensity import (CarbonIntensityProvider, ConstantProvider,
+                                    TraceProvider)
+from repro.carbon.regions import REGIONS, RegionStats, tier_of
+from repro.carbon.traces import synth_trace
+
+__all__ = ["CarbonIntensityProvider", "ConstantProvider", "TraceProvider",
+           "REGIONS", "RegionStats", "tier_of", "synth_trace"]

@@ -1,0 +1,43 @@
+"""Carbon-intensity providers (the electricityMap-API role, offline).
+
+Providers expose ``intensity(t_seconds)`` in g·CO₂e/kWh. Consistent with the
+paper (§3.1.2), intensity is piecewise-constant per hour: LXCC polls the API
+hourly because grid generator mixes change slowly.
+"""
+from __future__ import annotations
+
+from typing import Protocol, Sequence
+
+import numpy as np
+
+from repro.carbon.traces import synth_trace
+
+
+class CarbonIntensityProvider(Protocol):
+    def intensity(self, t_seconds: float) -> float: ...
+
+
+class ConstantProvider:
+    def __init__(self, value: float):
+        self.value = float(value)
+
+    def intensity(self, t_seconds: float) -> float:
+        return self.value
+
+
+class TraceProvider:
+    """Hourly trace, piecewise constant, wraps around at the end."""
+
+    def __init__(self, hourly: Sequence[float], start_s: float = 0.0):
+        self.hourly = np.asarray(hourly, dtype=np.float64)
+        self.start_s = start_s
+        if len(self.hourly) == 0:
+            raise ValueError("empty carbon trace")
+
+    @classmethod
+    def for_region(cls, region: str, hours: int = 24 * 30, seed: int = 0):
+        return cls(synth_trace(region, hours, seed))
+
+    def intensity(self, t_seconds: float) -> float:
+        idx = int((t_seconds - self.start_s) // 3600.0) % len(self.hourly)
+        return float(self.hourly[idx])

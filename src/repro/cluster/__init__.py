@@ -1,0 +1,6 @@
+"""Slice family + migration cost models (the server-catalog substrate)."""
+from repro.cluster.slices import Slice, SliceFamily, paper_family, tpu_v5e_family
+from repro.cluster.migration import MigrationCostModel
+
+__all__ = ["Slice", "SliceFamily", "paper_family", "tpu_v5e_family",
+           "MigrationCostModel"]

@@ -1,0 +1,56 @@
+"""Migration cost model (paper §4.1 / Fig. 7: time linear in state bytes).
+
+The paper measures LXC/CRIU stop-and-copy on CloudLab: suspend/resume,
+compress/decompress, and transfer all scale linearly with the memory
+footprint, with transfer-of-uncompressed dominating; a 7 GB container
+migrates in < 2 minutes. The TPU analogue is checkpoint → (reshard) →
+restore, with state = params + optimizer (+ KV/SSM state when serving),
+moving at the slice's checkpoint bandwidth.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MigrationCostModel:
+    # linear coefficients (seconds + seconds/GB), Fig. 7 calibration
+    suspend_base_s: float = 0.4
+    suspend_per_gb_s: float = 2.0
+    resume_base_s: float = 0.5
+    resume_per_gb_s: float = 2.2
+    compress_per_gb_s: float = 3.5
+    decompress_per_gb_s: float = 2.5
+    compression_ratio: float = 8.0
+    transfer_gbps: float = 1.0          # GB/s uncompressed path
+    restore_extra_s: float = 0.0        # e.g. compile-cache miss penalty
+
+    def suspend_time(self, state_gb: float) -> float:
+        return self.suspend_base_s + self.suspend_per_gb_s * state_gb
+
+    def resume_time(self, state_gb: float) -> float:
+        return self.resume_base_s + self.resume_per_gb_s * state_gb
+
+    def stop_and_copy_time(self, state_gb: float, compressed: bool = True,
+                           transfer_gbps: float = 0.0) -> float:
+        """Total downtime of a stop-and-copy migration (paper Fig. 7)."""
+        bw = transfer_gbps or self.transfer_gbps
+        t = self.suspend_time(state_gb) + self.resume_time(state_gb)
+        if compressed:
+            t += (self.compress_per_gb_s + self.decompress_per_gb_s) * state_gb
+            t += (state_gb / self.compression_ratio) / bw
+        else:
+            t += state_gb / bw
+        return t + self.restore_extra_s
+
+    def live_migration_overlap_s(self, state_gb: float,
+                                 transfer_gbps: float = 0.0) -> float:
+        """Both-servers-powered overlap of a live migration (downtime ~0)."""
+        bw = transfer_gbps or self.transfer_gbps
+        return 1.10 * state_gb / bw      # ~10% dirty-page re-copy
+
+
+def training_state_gb(n_params: int, optimizer: str = "adamw",
+                      param_bytes: int = 4) -> float:
+    mult = {"adamw": 3, "sgd": 2}.get(optimizer, 3)   # params + m [+ v]
+    return n_params * param_bytes * mult / 1e9

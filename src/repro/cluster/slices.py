@@ -1,0 +1,87 @@
+"""Slice (server) families: homogeneous capacities at fixed multiples.
+
+The paper assumes a family of general-purpose servers at 0.25×/0.5×/1×/2×/4×
+the baseline capacity, with base/peak power proportional to capacity
+(§5.1.2: baseline 100 W base, 200 W peak). ``paper_family`` reproduces that
+exactly for the simulator; ``tpu_v5e_family`` is the TPU mapping: slices of
+16…256 chips, per-chip idle/peak power plus per-host overhead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from repro.power.model import LinearPowerModel
+
+
+@dataclass(frozen=True)
+class Slice:
+    name: str
+    multiple: float            # capacity relative to the baseline slice
+    power: LinearPowerModel
+    chips: int = 0             # 0 for the paper's abstract servers
+    state_bw_gbps: float = 1.0  # checkpoint/migration path bandwidth (GB/s)
+
+    def capacity(self) -> float:
+        return self.multiple
+
+
+class SliceFamily:
+    """Ordered catalog (smallest -> largest) with availability tracking."""
+
+    def __init__(self, slices: Sequence[Slice], baseline_idx: int):
+        self.slices = sorted(slices, key=lambda s: s.multiple)
+        self.baseline_idx = next(
+            i for i, s in enumerate(self.slices)
+            if s.multiple == sorted(slices, key=lambda x: x.multiple)[baseline_idx].multiple)
+        # availability: the paper's policy drops unavailable servers and
+        # re-evaluates (§3.2.1); tests toggle this.
+        self.available = [True] * len(self.slices)
+
+    def __len__(self):
+        return len(self.slices)
+
+    def __getitem__(self, i: int) -> Slice:
+        return self.slices[i]
+
+    @property
+    def baseline(self) -> Slice:
+        return self.slices[self.baseline_idx]
+
+    def next_smaller(self, i: int) -> Optional[int]:
+        for j in range(i - 1, -1, -1):
+            if self.available[j]:
+                return j
+        return None
+
+    def next_larger(self, i: int) -> Optional[int]:
+        for j in range(i + 1, len(self.slices)):
+            if self.available[j]:
+                return j
+        return None
+
+    def smallest(self) -> int:
+        return next(i for i, a in enumerate(self.available) if a)
+
+
+def paper_family() -> SliceFamily:
+    """The paper's AWS-like family: 0.25x..4x, 100/200 W baseline."""
+    base = LinearPowerModel(100.0, 200.0)
+    slices = [Slice(f"x{m:g}", m, base.scale(m)) for m in
+              (0.25, 0.5, 1.0, 2.0, 4.0)]
+    return SliceFamily(slices, baseline_idx=2)
+
+
+def tpu_v5e_family(chip_idle_w: float = 75.0, chip_peak_w: float = 200.0,
+                   host_w: float = 150.0, chips_per_host: int = 8,
+                   baseline_chips: int = 64) -> SliceFamily:
+    """TPU v5e slices 16..256 chips; power = chips·(idle..peak) + hosts."""
+    slices = []
+    for chips in (16, 32, 64, 128, 256):
+        hosts = chips // chips_per_host
+        pm = LinearPowerModel(chips * chip_idle_w + hosts * host_w,
+                              chips * chip_peak_w + hosts * host_w)
+        slices.append(Slice(f"v5e-{chips}", chips / baseline_chips, pm,
+                            chips=chips, state_bw_gbps=2.0 * hosts))
+    fam = SliceFamily(slices, baseline_idx=2)
+    return fam

@@ -1,0 +1,4 @@
+"""Assigned architecture configs. ``get_arch(id)`` returns an ArchSpec."""
+from repro.configs.registry import ARCHS, get_arch, list_archs
+
+__all__ = ["ARCHS", "get_arch", "list_archs"]

@@ -1,0 +1,19 @@
+"""Carbon Containers core (the paper's contribution).
+
+- policy.py        §3.2 enforcement policies (energy-efficiency/performance)
+                   + the evaluated baselines (agnostic, suspend/resume,
+                   vertical-scaling-only)
+- container.py     the lxcc-like container object + plant model
+- simulator.py     trace-driven large-scale evaluation (Figs 10-17)
+- carbon_aware_trainer.py  live enforcement on a JAX training job
+- elastic.py       checkpoint -> reshard -> restore slice migration
+"""
+from repro.core.container import CarbonContainer, ContainerState, PlantModel
+from repro.core.policy import (CarbonAgnosticPolicy, CarbonContainerPolicy,
+                               SuspendResumePolicy, VScaleOnlyPolicy)
+from repro.core.simulator import SimConfig, SimResult, simulate
+
+__all__ = ["CarbonContainer", "ContainerState", "PlantModel",
+           "CarbonContainerPolicy", "CarbonAgnosticPolicy",
+           "SuspendResumePolicy", "VScaleOnlyPolicy",
+           "SimConfig", "SimResult", "simulate"]

@@ -1,0 +1,117 @@
+"""Elastic slice migration: checkpoint -> rebuild mesh -> reshard -> restore.
+
+This is the TPU-native CRIU: the executor snapshots the training state,
+constructs a mesh over the destination slice's devices, device_puts every
+leaf with the *new* mesh's shardings (the reshard), and re-jits the step.
+The same machinery serves fault recovery (restore on fewer devices after a
+failure) and the Carbon Containers migration mechanism.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.config import TrainConfig
+from repro.models.api import Model
+from repro.models.params import param_shardings
+from repro.train import checkpoint as CKPT
+from repro.train import loop as TL
+
+
+def mesh_over(devices, model_axis: int = 1) -> Mesh:
+    """Mesh over an explicit device subset (data-major)."""
+    n = len(devices)
+    assert n % model_axis == 0, (n, model_axis)
+    import numpy as np
+    arr = np.array(devices).reshape(n // model_axis, model_axis)
+    return Mesh(arr, ("data", "model"))
+
+
+@dataclass
+class ElasticJob:
+    """A training job that can move between device subsets ("slices")."""
+
+    model: Model
+    cfg: TrainConfig
+    ckpt_dir: str
+
+    def __post_init__(self):
+        self._mesh: Optional[Mesh] = None
+        self._step_fn: Optional[Callable] = None
+        self.state = None
+        self.manager = CKPT.CheckpointManager(self.ckpt_dir, keep=2,
+                                              async_save=False)
+        self.step_idx = 0
+        self.migrations = []
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self, devices, key=None):
+        self._mesh = mesh_over(devices)
+        with self._mesh:
+            self.state = TL.init_state(self.model, self.cfg.optimizer,
+                                       key if key is not None else jax.random.PRNGKey(self.cfg.seed))
+            sh = self._state_shardings()
+            self.state = jax.tree.map(jax.device_put, self.state, sh)
+        self._rejit()
+
+    def _state_shardings(self):
+        return param_shardings(TL.state_specs(self.model, self.cfg.optimizer),
+                               self._mesh)
+
+    def _rejit(self):
+        step = TL.make_train_step(self.model, self.cfg)
+        self._step_fn = jax.jit(step, donate_argnums=(0,))
+
+    # -- the enforceable interface -------------------------------------------
+    def train_step(self, batch) -> dict:
+        from repro.data.pipeline import shard_batch
+        with self._mesh:
+            batch = shard_batch(batch, self._mesh)
+            self.state, metrics = self._step_fn(self.state, batch)
+        self.step_idx += 1
+        return {k: float(v) for k, v in metrics.items()}
+
+    def checkpoint(self) -> dict:
+        self.manager.save(self.step_idx, self.state)
+        self.manager.wait()
+        return self.manager._last_info or {}
+
+    def migrate(self, devices) -> dict:
+        """Stop-and-copy to a new device subset; returns timing breakdown."""
+        t0 = time.perf_counter()
+        info = self.checkpoint()
+        t1 = time.perf_counter()
+        self._mesh = mesh_over(devices)
+        abstract = TL.abstract_state(self.model, self.cfg.optimizer)
+        self.state, _ = self.manager.restore(
+            abstract, shardings=self._state_shardings())
+        t2 = time.perf_counter()
+        self._rejit()
+        rec = {"save_s": t1 - t0, "restore_s": t2 - t1,
+               "bytes": info.get("bytes", 0), "n_devices": len(devices),
+               "step": self.step_idx}
+        self.migrations.append(rec)
+        return rec
+
+    def suspend(self) -> dict:
+        info = self.checkpoint()
+        self.state = None           # release device memory
+        return info
+
+    def resume(self, devices) -> dict:
+        self._mesh = mesh_over(devices)
+        abstract = TL.abstract_state(self.model, self.cfg.optimizer)
+        self.state, step = self.manager.restore(
+            abstract, shardings=self._state_shardings())
+        self.step_idx = step
+        self._rejit()
+        return {"resumed_at_step": step, "n_devices": len(devices)}
+
+    # -- fault tolerance -------------------------------------------------------
+    def recover_after_failure(self, surviving_devices) -> dict:
+        """Node failure: restore the latest checkpoint on the survivors."""
+        return self.resume(surviving_devices)

@@ -1,0 +1,217 @@
+"""Carbon enforcement policies (paper §3.2) + evaluation baselines (§5.1.2).
+
+All policies share one decision interface:
+
+    decide(family, state, demand, c_intensity, target, eps) -> Action
+
+``demand`` is workload intensity in baseline-capacity units (the paper's
+normalized utilization; >1 means the job would use more than the baseline
+server). Decisions are taken once per monitoring interval (5 min default).
+
+The general policy (§3.2.1), faithfully:
+  - trigger when C(t) comes within ε of C_target;
+  - first vertically scale down (cheapest mechanism); in parallel estimate
+    C_j on the next-smaller slice and migrate when the smaller slice emits
+    less *and* throttles no more than the scaled-down larger slice;
+  - suspend only when the smallest slice, fully scaled down, still exceeds
+    the target (its baseload floor);
+  - scale up / migrate up when below target and throttled.
+
+Energy-efficiency variant (§3.2.2): additionally migrates down whenever a
+smaller slice serves the current demand unthrottled with less power — even
+when far below the carbon target.
+
+Performance variant (§3.2.3): never migrates down for efficiency; instead
+scales *up* toward the largest slice whose at-demand emissions stay within
+ε of the target, holding reserve capacity for bursts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.cluster.slices import SliceFamily
+from repro.core.container import ContainerState, PlantModel
+
+
+# ---------------------------------------------------------------------------
+# Actions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Action:
+    kind: str                       # stay | migrate | suspend | resume
+    duty: float = 1.0
+    target_slice: Optional[int] = None
+
+
+def _power_budget_w(target: float, c_intensity: float, eps: float) -> float:
+    """Max power keeping C = p*c/1000 <= (1-eps)*target."""
+    if c_intensity <= 0:
+        return float("inf")
+    return (1.0 - eps) * target * 1000.0 / c_intensity
+
+
+# ---------------------------------------------------------------------------
+# The Carbon Containers policy (both variants)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CarbonContainerPolicy:
+    variant: str = "energy"          # energy | performance
+    allow_migration: bool = True
+    min_dwell: int = 2               # intervals between migrations (anti-thrash)
+    idle_margin: float = 0.02        # EE idle-migration power improvement margin
+
+    def decide(self, family: SliceFamily, state: ContainerState,
+               demand: float, c: float, target: float, eps: float) -> Action:
+        budget_w = _power_budget_w(target, c, eps)
+        i = state.slice_idx
+        s_i = family[i]
+        # efficiency-motivated moves wait out the dwell (anti-thrash);
+        # enforcement- and throttle-motivated moves react immediately
+        can_migrate = self.allow_migration
+        can_migrate_idle = (self.allow_migration and state.dwell >= self.min_dwell)
+
+        # --- suspended: resume when the smallest slice fits the budget ----
+        if state.suspended:
+            j = family.smallest()
+            s_j = family[j]
+            u_cap_j = s_j.power.util_for_power(budget_w)
+            if s_j.power.base_w <= budget_w and u_cap_j > 0.0:
+                return Action("resume", duty=u_cap_j, target_slice=j)
+            return Action("suspend")
+
+        u_cap_i = s_i.power.util_for_power(budget_w)       # duty cap on i
+        u_need_i = min(demand / s_i.multiple, 1.0)         # duty to serve demand
+
+        # --- over / near target: enforce (§3.2.1) --------------------------
+        if (s_i.power.power(u_need_i) > budget_w) or (s_i.power.base_w > budget_w):
+            if s_i.power.base_w > budget_w or u_cap_i <= 0.0:
+                # even idle exceeds the budget on this slice
+                j = family.next_smaller(i) if can_migrate else None
+                if j is not None:
+                    s_j = family[j]
+                    if s_j.power.base_w <= budget_w:
+                        u_cap_j = s_j.power.util_for_power(budget_w)
+                        return Action("migrate", duty=max(u_cap_j, 0.0),
+                                      target_slice=j)
+                    # fall through toward smallest
+                    return Action("migrate", duty=0.0, target_slice=j)
+                if i == family.smallest() or not self.allow_migration:
+                    return Action("suspend")
+                return Action("stay", duty=0.0)
+            # vertical scale down to the cap; consider the next-smaller slice
+            q_new = u_cap_i
+            throttle_i = max(0.0, demand - s_i.multiple * q_new)
+            c_i = PlantModel.rate(s_i.power.power(min(q_new, u_need_i)), c)
+            j = family.next_smaller(i) if can_migrate else None
+            if j is not None:
+                s_j = family[j]
+                u_cap_j = s_j.power.util_for_power(budget_w)
+                u_j = min(demand / s_j.multiple, u_cap_j, 1.0)
+                throttle_j = max(0.0, demand - s_j.multiple * u_j)
+                c_j = PlantModel.rate(s_j.power.power(u_j), c)
+                # paper: migrate when the smaller slice emits less and
+                # throttles no more than the vertically-scaled larger slice
+                if c_j < c_i and throttle_j <= throttle_i + 1e-12:
+                    return Action("migrate", duty=max(u_cap_j, 0.0),
+                                  target_slice=j)
+            return Action("stay", duty=q_new)
+
+        # --- below target ---------------------------------------------------
+        if self.variant == "energy":
+            # migrate down when a smaller slice serves the *recent peak*
+            # demand unthrottled with less power (baseload amortization,
+            # §3.2.2; peak-awareness is the monitor's rolling window and
+            # avoids ping-pong on bursty traces)
+            peak = max(state.recent_peak, demand)
+            j = family.next_smaller(i) if can_migrate_idle else None
+            if j is not None:
+                s_j = family[j]
+                u_cap_j = s_j.power.util_for_power(budget_w)
+                u_j = peak / s_j.multiple
+                if (u_j <= min(u_cap_j, 0.9)
+                        and s_j.power.power(min(u_j, 1.0))
+                        < (1.0 - self.idle_margin) * s_i.power.power(u_need_i)):
+                    return Action("migrate", duty=min(1.0, max(u_cap_j, 0.0)),
+                                  target_slice=j)
+            # throttled on a full slice? migrate straight to the best fit
+            if demand > s_i.multiple * min(u_cap_i, 1.0):
+                if can_migrate:
+                    k = self._best_fit_up(family, i, demand, budget_w)
+                    if k is not None:
+                        return Action("migrate", duty=1.0, target_slice=k)
+                return Action("stay", duty=min(1.0, u_cap_i))
+            return Action("stay", duty=min(1.0, u_cap_i))
+
+        # performance variant (§3.2.3): hold capacity near the target;
+        # up-moves need 10% budget headroom (hysteresis vs hourly c(t) noise)
+        k = i
+        while can_migrate_idle:
+            nxt = family.next_larger(k)
+            if nxt is None:
+                break
+            s_n = family[nxt]
+            u_n = min(demand / s_n.multiple, 1.0)
+            if s_n.power.power(u_n) <= 0.9 * budget_w:
+                k = nxt
+            else:
+                break
+        if k != i:
+            return Action("migrate", duty=1.0, target_slice=k)
+        return Action("stay", duty=min(1.0, u_cap_i))
+
+    @staticmethod
+    def _best_fit_up(family: SliceFamily, i: int, demand: float,
+                     budget_w: float):
+        """Smallest larger slice that serves `demand` within the budget."""
+        k = family.next_larger(i)
+        while k is not None:
+            s_k = family[k]
+            u_k = min(demand / s_k.multiple, 1.0)
+            if s_k.power.power(u_k) <= budget_w:
+                if demand <= s_k.multiple or family.next_larger(k) is None:
+                    return k
+                k = family.next_larger(k)
+                continue
+            return None
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Baselines (paper §5.1.2)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CarbonAgnosticPolicy:
+    """Baseline server, no scaling, no migration, never suspends."""
+
+    def decide(self, family, state, demand, c, target, eps) -> Action:
+        if state.slice_idx != family.baseline_idx:
+            return Action("migrate", duty=1.0, target_slice=family.baseline_idx)
+        return Action("stay", duty=1.0)
+
+
+@dataclass
+class SuspendResumePolicy:
+    """Wait-AWhile-style [34]: baseline server; suspend when emissions at the
+    current demand would exceed the target, resume when they fit."""
+
+    def decide(self, family, state, demand, c, target, eps) -> Action:
+        b = family[family.baseline_idx]
+        u = min(demand / b.multiple, 1.0)
+        over = PlantModel.rate(b.power.power(u), c) > (1.0 - eps) * target
+        if state.suspended:
+            if not over:
+                return Action("resume", duty=1.0,
+                              target_slice=family.baseline_idx)
+            return Action("suspend")
+        if over:
+            return Action("suspend")
+        return Action("stay", duty=1.0)
+
+
+def VScaleOnlyPolicy(variant: str = "energy") -> CarbonContainerPolicy:
+    """Carbon Containers without migration (vertical scaling + suspend)."""
+    return CarbonContainerPolicy(variant=variant, allow_migration=False)

@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic LM streams with host-side sharded feeding."""
+from repro.data.pipeline import SyntheticLM, markov_stream, shard_batch
+
+__all__ = ["SyntheticLM", "markov_stream", "shard_batch"]

@@ -1,0 +1,6 @@
+"""Distributed runtime concerns: fault tolerance, stragglers, overlap."""
+from repro.distributed.fault import FailureInjector, HeartbeatMonitor, run_with_recovery
+from repro.distributed.stragglers import StragglerDetector
+
+__all__ = ["FailureInjector", "HeartbeatMonitor", "run_with_recovery",
+           "StragglerDetector"]

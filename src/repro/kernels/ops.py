@@ -1,0 +1,148 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+``impl`` semantics (every op):
+  - "auto":    Pallas on TPU backends, pure-JAX elsewhere (chunked/assoc forms
+               whose memory behaviour mirrors the kernels — used by dry-runs).
+  - "pallas":  force the Pallas kernel (compiled on TPU, interpret on CPU).
+  - "ref":     force the materializing oracle (tests / small shapes).
+  - "chunked"/"assoc": force the pure-JAX blocked form.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+        causal: bool = True, window: int = 0, q_offset=0, kv_len=None,
+        kv_positions=None, impl: str = "auto",
+        interpret: Optional[bool] = None) -> jax.Array:
+    """GQA attention. q (B,Sq,Hq,Dh); k,v (B,Skv,Hkv,Dh)."""
+    B, Sq, Hq, Dh = q.shape
+    Skv = k.shape[1]
+    if impl == "auto":
+        if Sq == 1 or kv_positions is not None:
+            impl = "ref"            # decode: single-row einsum is optimal
+        elif _on_tpu() and isinstance(q_offset, int) and q_offset == 0 and kv_len is None:
+            impl = "pallas"
+        elif Sq * Skv > 1024 * 1024:
+            impl = "chunked"        # large prefill/train on CPU: bounded temps
+        else:
+            impl = "ref"
+    if impl == "pallas":
+        from repro.kernels import flash_attention as FA
+        return FA.flash_attention(q, k, v, causal=causal, window=window,
+                                  interpret=bool(interpret) if interpret is not None
+                                  else not _on_tpu())
+    if impl == "chunked":
+        if isinstance(q_offset, int) and q_offset == 0 and kv_len is None:
+            # self-attention: flash path (custom VJP — train-memory safe)
+            return R.attention_flash(q, k, v, causal=causal, window=window)
+        return R.attention_chunked(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, kv_len=kv_len)
+    if impl == "ref":
+        return R.attention_ref(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, kv_len=kv_len,
+                               kv_positions=kv_positions)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+def ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+        c: jax.Array, d: jax.Array, *, h0=None, chunk: int = 256,
+        impl: str = "auto", interpret: Optional[bool] = None):
+    """SSD scan. Returns (y, h_final). See kernels.ref.ssd_ref for semantics."""
+    if impl == "auto":
+        impl = "pallas" if (_on_tpu() and b.shape[2] == 1) else "chunked"
+    if impl == "pallas":
+        from repro.kernels import ssd_scan as SS
+        return SS.ssd_pallas(x, dt, a_log, b, c, d, h0=h0, chunk=chunk,
+                             interpret=bool(interpret) if interpret is not None
+                             else not _on_tpu())
+    if impl == "chunked":
+        return R.ssd_chunked(x, dt, a_log, b, c, d, h0=h0, chunk=chunk)
+    if impl == "ref":
+        return R.ssd_ref(x, dt, a_log, b, c, d, h0=h0)
+    raise ValueError(f"unknown ssd impl {impl!r}")
+
+
+def ssd_decode_step(x, dt, a_log, b, c, d, h):
+    """Single-token SSD update. x (B,H,P), dt (B,H), b,c (B,G,N), h (B,H,P,N)."""
+    Hh = x.shape[1]
+    rep = Hh // b.shape[1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bt = jnp.repeat(b, rep, axis=1).astype(jnp.float32)
+    ct = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf * a[None, :])
+    h = h.astype(jnp.float32) * da[..., None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", x.astype(jnp.float32), bt, dtf)
+    y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+    y = y + x.astype(jnp.float32) * d.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def rglru(x: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array, *,
+          h0=None, impl: str = "auto", interpret: Optional[bool] = None):
+    """Gated linear recurrence. Returns (h_seq, h_final)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "assoc"
+    if impl == "pallas":
+        from repro.kernels import rglru_scan as RG
+        return RG.rglru_pallas(x, r, i, lam, h0=h0,
+                               interpret=bool(interpret) if interpret is not None
+                               else not _on_tpu())
+    if impl == "assoc":
+        return R.rglru_assoc(x, r, i, lam, h0=h0)
+    if impl == "ref":
+        return R.rglru_ref(x, r, i, lam, h0=h0)
+    raise ValueError(f"unknown rglru impl {impl!r}")
+
+
+def rglru_decode_step(x, r, i, lam, h):
+    """Single-token RG-LRU update. x,r,i (B,W); h (B,W)."""
+    log_a_base = -R.RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32))
+    rg = jax.nn.sigmoid(r.astype(jnp.float32))
+    ig = jax.nn.sigmoid(i.astype(jnp.float32))
+    log_a = log_a_base[None, :] * rg
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    h = a * h.astype(jnp.float32) + beta * (ig * x.astype(jnp.float32))
+    return h.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b=None, state=None):
+    return R.causal_conv1d_ref(x, w, b, state)
+
+
+def conv1d_decode_step(x, w, b, state):
+    """x (B,C) one step; state (B,K-1,C). Returns (y (B,C), new state)."""
+    K = w.shape[0]
+    xs = jnp.concatenate([state.astype(x.dtype), x[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", xs.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype), xs[:, 1:]

@@ -1,0 +1,480 @@
+"""Pure-jnp oracles for every Pallas kernel (and the model fallback paths).
+
+These are the *semantic ground truth*: the Pallas kernels in this package are
+validated against these functions (interpret=True on CPU) across shape/dtype
+sweeps, and the model code uses them directly on non-TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / local-window, offset for decode)
+# ---------------------------------------------------------------------------
+
+def _attn_mask(sq: int, skv: int, q_offset, kv_len, causal: bool, window: int,
+               kv_positions=None):
+    """(sq, skv) boolean mask of allowed attention edges (True = keep)."""
+    q_pos = q_offset + jnp.arange(sq)[:, None]          # (sq, 1)
+    if kv_positions is None:
+        kv_pos = jnp.arange(skv)[None, :]               # (1, skv)
+    else:
+        kv_pos = jnp.asarray(kv_positions)[None, :]     # ring buffers etc.
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window and window > 0:
+        mask &= kv_pos > q_pos - window
+    if kv_len is not None:
+        mask &= kv_pos < kv_len
+    return mask
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  q_offset=0, kv_len=None, kv_positions=None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Materializing GQA attention.
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh); Hq % Hkv == 0.
+    q_offset: absolute position of q[0] (static or traced scalar).
+    kv_len:   number of valid KV entries (for partially-filled caches).
+    kv_positions: (Skv,) absolute positions of KV entries (ring buffers).
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, Dh).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf)     # (B,Hkv,G,Sq,Skv)
+    mask = _attn_mask(Sq, Skv, q_offset, kv_len, causal, window, kv_positions)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      q_offset=0, kv_len=None,
+                      scale: Optional[float] = None,
+                      q_block: int = 512, kv_block: int = 1024) -> jax.Array:
+    """Online-softmax (flash-style) attention in pure JAX.
+
+    Bounded temporaries: scans q blocks (outer) x kv blocks (inner carry).
+    This is the lowering used for large-shape dry-runs — it mirrors the memory
+    behaviour of the Pallas kernel instead of materializing (Sq, Skv) logits.
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    # pad to block multiples
+    sq_p = -(-Sq // qb) * qb
+    skv_p = -(-Skv // kb) * kb
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_p - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_p - Skv), (0, 0), (0, 0)))
+    kv_len_eff = jnp.asarray(Skv if kv_len is None else kv_len, jnp.int32)
+
+    nq, nk = sq_p // qb, skv_p // kb
+    qblocks = qp.reshape(B, nq, qb, Hkv, G, Dh).astype(jnp.float32) * scale
+    kblocks = kp.reshape(B, nk, kb, Hkv, Dh).astype(jnp.float32)
+    vblocks = vp.reshape(B, nk, kb, Hkv, Dh).astype(jnp.float32)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                                   # (B,qb,Hkv,G,Dh)
+        q_pos = q_offset + qidx * qb + jnp.arange(qb)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            kv_pos = kidx * kb + jnp.arange(kb)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk)
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window and window > 0:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            mask &= kv_pos[None, :] < kv_len_eff
+            # additive (qb,kb) bias: a broadcast `where` would be hoisted and
+            # stacked across scan iterations at (nq,nk,B,H,G,qb,kb)
+            logits = logits + jnp.where(mask, 0.0, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1, keepdims=True))
+            p = jnp.exp(logits - m_new)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qb, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kblocks.swapaxes(0, 1), vblocks.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-37)                 # (B,Hkv,G,qb,Dh)
+        return None, out.transpose(0, 3, 1, 2, 4)         # (B,qb,Hkv,G,Dh)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qblocks.swapaxes(0, 1), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, sq_p, Hq, Dh)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with custom VJP (pure JAX): backward recomputes per-block
+# probabilities instead of saving them (the flash-attention insight). This is
+# what makes large-seq *training* memory-feasible; `attention_chunked` alone
+# would stack S^2 residuals during scan differentiation.
+# ---------------------------------------------------------------------------
+
+def _flash_fwd_inner(q, k, v, causal, window, scale, q_block, kv_block, kv_valid):
+    """Returns (out, lse). Shapes as attention_chunked; no padding support
+    beyond block multiples (wrapper pads)."""
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qb, kb = q_block, kv_block
+    nq, nk = Sq // qb, Skv // kb
+    qf = q.reshape(B, nq, qb, Hkv, G, Dh).astype(jnp.float32) * scale
+    kf = k.reshape(B, nk, kb, Hkv, Dh).astype(jnp.float32)
+    vf = v.reshape(B, nk, kb, Hkv, Dh).astype(jnp.float32)
+
+    def q_step(_, qi):
+        qblk, qidx = qi
+        q_pos = qidx * qb + jnp.arange(qb)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            kv_pos = kidx * kb + jnp.arange(kb)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk)
+            mask = kv_pos[None, :] < kv_valid
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window and window > 0:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            s = s + jnp.where(mask, 0.0, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qb, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kf.swapaxes(0, 1), vf.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-37)
+        lse = (m + jnp.log(jnp.maximum(l, 1e-37)))[..., 0]   # (B,Hkv,G,qb)
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None,
+                                   (qf.swapaxes(0, 1), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, Dh)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, Hkv, G, Sq)
+    return out.astype(q.dtype), lse
+
+
+def _flash_bwd_inner(q, k, v, out, lse, dout, causal, window, scale,
+                     q_block, kv_block, kv_valid):
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qb, kb = q_block, kv_block
+    nq, nk = Sq // qb, Skv // kb
+    qf = q.reshape(B, nq, qb, Hkv, G, Dh).astype(jnp.float32)
+    kf = k.reshape(B, nk, kb, Hkv, Dh).astype(jnp.float32)
+    vf = v.reshape(B, nk, kb, Hkv, Dh).astype(jnp.float32)
+    of = out.reshape(B, nq, qb, Hkv, G, Dh).astype(jnp.float32)
+    dof = dout.reshape(B, nq, qb, Hkv, G, Dh).astype(jnp.float32)
+    lsef = lse.reshape(B, Hkv, G, nq, qb)
+    # D_i = rowsum(dout * out)
+    delta = jnp.einsum("bnqhgd,bnqhgd->bhgnq", dof, of)
+
+    def q_step(carry, qi):
+        dk_all, dv_all = carry                             # (nk,B,kb,Hkv,Dh)
+        qblk, oblk, doblk, lseblk, dblk, qidx = qi
+        q_pos = qidx * qb + jnp.arange(qb)
+
+        def kv_step(carry_in, ki):
+            dk_all, dv_all, dq = carry_in
+            kidx = ki
+            kblk = jax.lax.dynamic_index_in_dim(kf, kidx, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vf, kidx, 1, keepdims=False)
+            kv_pos = kidx * kb + jnp.arange(kb)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk * scale, kblk)
+            mask = kv_pos[None, :] < kv_valid
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window and window > 0:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            s = s + jnp.where(mask, 0.0, NEG_INF)
+            p = jnp.exp(s - lseblk[..., None])              # (B,Hkv,G,qb,kb)
+            dv_c = jnp.einsum("bhgqk,bqhgd->bkhd", p, doblk)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doblk, vblk)
+            ds = p * (dp - dblk[..., None])
+            dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kblk) * scale
+            dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qblk) * scale
+            dk_all = dk_all.at[kidx].add(dk_c)
+            dv_all = dv_all.at[kidx].add(dv_c)
+            return (dk_all, dv_all, dq), None
+
+        dq0 = jnp.zeros((B, qb, Hkv, G, Dh), jnp.float32)
+        (dk_all, dv_all, dq), _ = jax.lax.scan(
+            kv_step, (dk_all, dv_all, dq0), jnp.arange(nk))
+        return (dk_all, dv_all), dq
+
+    dk0 = jnp.zeros((nk, B, kb, Hkv, Dh), jnp.float32)
+    dv0 = jnp.zeros((nk, B, kb, Hkv, Dh), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (qf.swapaxes(0, 1), of.swapaxes(0, 1), dof.swapaxes(0, 1),
+         lsef.transpose(3, 0, 1, 2, 4), delta.transpose(3, 0, 1, 2, 4),
+         jnp.arange(nq)))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, Dh).astype(q.dtype)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, Dh).astype(k.dtype)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, Dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+def attention_flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None,
+                    q_block: int = 512, kv_block: int = 1024) -> jax.Array:
+    """Flash attention (pure JAX, custom VJP). Self-attention only
+    (Sq == positions of KV), used by train/prefill paths."""
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    scale = scale if scale is not None else Dh ** -0.5
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    sq_p = -(-Sq // qb) * qb
+    skv_p = -(-Skv // kb) * kb
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_p - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_p - Skv), (0, 0), (0, 0)))
+    @jax.custom_vjp
+    def f(q, k, v):
+        out, _ = _flash_fwd_inner(q, k, v, causal, window, scale, qb, kb, Skv)
+        return out
+
+    def f_fwd(q, k, v):
+        out, lse = _flash_fwd_inner(q, k, v, causal, window, scale, qb, kb, Skv)
+        return out, (q, k, v, out, lse)
+
+    def f_bwd(res, dout):
+        q, k, v, out, lse = res
+        return _flash_bwd_inner(q, k, v, out, lse, dout, causal, window,
+                                scale, qb, kb, Skv)
+
+    f.defvjp(f_fwd, f_bwd)
+    out = f(qp, kp, vp)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality)
+# ---------------------------------------------------------------------------
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+            b: jax.Array, c: jax.Array, d: jax.Array,
+            h0: Optional[jax.Array] = None):
+    """Exact sequential SSD recurrence (the oracle).
+
+    x:  (B, S, H, P)   head inputs
+    dt: (B, S, H)      softplus'd timestep (>0)
+    a_log: (H,)        A = -exp(a_log)
+    b, c: (B, S, G, N) input/output projections (G groups, H % G == 0)
+    d:  (H,)           skip
+    h0: (B, H, P, N)   initial state
+    returns (y (B,S,H,P), h_final (B,H,P,N))
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    a = -jnp.exp(a_log.astype(jnp.float32))              # (H,)
+    bh = jnp.repeat(b, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    ch = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    h = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                            # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        da = jnp.exp(dtt * a)                            # (B,H)
+        h = h * da[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, bt, dtt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                                   bh.swapaxes(0, 1), ch.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + xf * d.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+def _segsum(t: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < m <= i} t[..., m].
+
+    Lower-triangular (i >= j) entries valid, others -inf.
+    """
+    n = t.shape[-1]
+    cs = jnp.cumsum(t, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(n)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b: jax.Array, c: jax.Array, d: jax.Array,
+                h0: Optional[jax.Array] = None, chunk: int = 256):
+    """Chunked SSD (Mamba-2 paper alg.): intra-chunk dense + inter-chunk scan.
+
+    Same signature/semantics as ``ssd_ref``; this is the form the Pallas
+    kernel mirrors (MXU-friendly per-chunk matmuls, sequential chunk carry).
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+    a = -jnp.exp(a_log.astype(jnp.float32))              # (H,)
+
+    xf = x.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    dtf = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    bh = jnp.repeat(b, rep, axis=2).reshape(B, nc, Q, H, N).astype(jnp.float32)
+    ch = jnp.repeat(c, rep, axis=2).reshape(B, nc, Q, H, N).astype(jnp.float32)
+
+    da = dtf * a[None, None, None, :]                    # (B,nc,Q,H) decay log per step
+    cum = jnp.cumsum(da, axis=2)                         # inclusive cumsum within chunk
+    seg = _segsum(da.transpose(0, 1, 3, 2))              # (B,nc,H,Q,Q)
+    L = jnp.exp(seg)
+
+    # intra-chunk (diagonal blocks): Y_d[q] = sum_{k<=q} C_q·B_k L[q,k] dt_k x_k
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", ch, bh)
+    m = scores * L
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", m, dtf, xf)
+
+    # per-chunk input states: S_c = sum_k exp(cum_end - cum_k) dt_k B_k x_k
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,H)
+    states = jnp.einsum("bckh,bckh,bckhn,bckhp->bchpn", decay_to_end, dtf, bh, xf)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def chunk_step(h, inp):
+        s_c, dec = inp                                   # (B,H,P,N), (B,H)
+        h_out = h                                        # state entering this chunk
+        h = h * dec[..., None, None] + s_c
+        return h, h_out
+
+    hinit = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        chunk_step, hinit, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                           # (B,nc,H,P,N) state entering chunk
+
+    # off-diagonal contribution: Y_off[q] = C_q · (exp(cum_q) * h_in)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", ch, h_in, jnp.exp(cum))
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    y = y + x.astype(jnp.float32) * d.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def rglru_ref(x: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+              h0: Optional[jax.Array] = None):
+    """Exact sequential RG-LRU: the oracle.
+
+    x, r, i: (B, S, W) — input, recurrence gate (pre-sigmoid), input gate
+    (pre-sigmoid); lam: (W,) Λ parameter.
+    a_t = exp(-c · softplus(Λ) · σ(r_t));  h_t = a_t h_{t-1} + √(1-a_t²)·(σ(i_t)·x_t)
+    returns (h (B,S,W), h_final (B,W))
+    """
+    B, S, W = x.shape
+    log_a_base = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32))  # (W,)
+    rg = jax.nn.sigmoid(r.astype(jnp.float32))
+    ig = jax.nn.sigmoid(i.astype(jnp.float32))
+    log_a = log_a_base[None, None, :] * rg               # (B,S,W)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably: sqrt(-expm1(2 log a))
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gx = beta * (ig * x.astype(jnp.float32))
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        at, gxt = inp
+        h = at * h + gxt
+        return h, h
+
+    h_final, hs = jax.lax.scan(step, h, (a.swapaxes(0, 1), gx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype), h_final
+
+
+def rglru_assoc(x: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+                h0: Optional[jax.Array] = None):
+    """Associative-scan RG-LRU (log-depth; the fast pure-JAX path)."""
+    B, S, W = x.shape
+    log_a_base = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32))
+    rg = jax.nn.sigmoid(r.astype(jnp.float32))
+    ig = jax.nn.sigmoid(i.astype(jnp.float32))
+    log_a = log_a_base[None, None, :] * rg
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gx = beta * (ig * x.astype(jnp.float32))
+    if h0 is not None:
+        # fold h0 into the first element: h_1 = a_1 h0 + gx_1
+        gx = gx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (mamba2 / recurrentgemma frontends)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d_ref(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                      state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C), state: (B,K-1,C) history.
+
+    Returns (y (B,S,C), new_state (B,K-1,C)).
+    """
+    B, S, C = x.shape
+    K = w.shape[0]
+    hist = jnp.zeros((B, K - 1, C), x.dtype) if state is None else state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)              # (B, S+K-1, C)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for k in range(K):
+        y = y + xp[:, k:k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    new_state = xp[:, S:]                                # last K-1 inputs
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run entry point.
+
+Lowers + compiles every (architecture × input shape) cell on the production
+meshes — 16×16=256 chips single-pod and 2×16×16=512 chips multi-pod — with
+explicit in/out shardings, prints memory/cost analyses, and records roofline
+inputs to experiments/dryrun/.
+
+The XLA_FLAGS line above MUST run before any jax import (jax locks the
+device count at first init), which is why it is the first statement.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--skip-existing true]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-2.7b --shape long_500k --mesh both
+"""
+import sys
+import traceback
+
+from repro.config import SHAPES, parse_cli
+from repro.configs import list_archs
+from repro.configs.registry import all_cells
+from repro.launch import dryrun_lib as DL
+
+DEFAULT_SAVE = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "dryrun")
+
+
+def main(argv=None) -> int:
+    args = parse_cli(argv if argv is not None else sys.argv[1:])
+    save_dir = os.path.abspath(args.get("save-dir", DEFAULT_SAVE))
+    skip_existing = args.get("skip-existing", "true").lower() != "false"
+    probes = args.get("probes", "true").lower() != "false"
+    remat = args.get("remat", "full")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.get("mesh", "both")]
+
+    if "all" in args:
+        cells = [(a, s) for a, s, _ in all_cells()]
+    else:
+        archs = [args["arch"]] if "arch" in args else list_archs()
+        shapes = [args["shape"]] if "shape" in args else list(SHAPES)
+        cells = [(a, s) for a in archs for s in shapes]
+
+    failures = []
+    for multi_pod in meshes:
+        # Probes (and the roofline table) are single-pod only; the multi-pod
+        # pass proves the "pod" axis shards.
+        cell_probes = probes and not multi_pod
+        for arch_id, shape_name in cells:
+            path = DL.cell_path(save_dir, multi_pod, arch_id, shape_name)
+            if skip_existing and os.path.exists(path):
+                print(f"[skip existing] {arch_id} x {shape_name} "
+                      f"({'multi' if multi_pod else 'single'})", flush=True)
+                continue
+            label = f"{arch_id} x {shape_name} ({'multi' if multi_pod else 'single'}-pod)"
+            print(f"=== {label} ===", flush=True)
+            try:
+                res = DL.analyze_cell(arch_id, shape_name, multi_pod=multi_pod,
+                                      remat=remat, probes=cell_probes,
+                                      save_dir=save_dir)
+                if res["status"] == "ok":
+                    mem = res["memory"]
+                    print(f"  ok: compile {res['compile_s']:.1f}s, "
+                          f"peak/device {mem['peak_bytes']/1e9:.2f} GB, "
+                          f"collective wire {res['collectives']['total_wire_bytes']/1e6:.1f} MB",
+                          flush=True)
+                else:
+                    print(f"  skipped: {res['reason']}", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((label, repr(e)))
+                print(f"  FAIL: {e!r}", flush=True)
+
+    print(f"\n{len(failures)} failures")
+    for label, err in failures:
+        print(f"  {label}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

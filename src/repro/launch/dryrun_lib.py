@@ -1,0 +1,235 @@
+"""Dry-run machinery: build + lower + compile every (arch × shape × mesh) cell.
+
+The dry-run proves the distribution config is coherent: every cell must
+``.lower().compile()`` on the production meshes with explicit in/out
+shardings, and its compiled artifact yields the roofline inputs:
+
+  - memory_analysis()      -> per-device bytes (proves it fits 16 GB HBM)
+  - cost_analysis()        -> per-device FLOPs/bytes (while-bodies counted
+                              once; corrected via marginal-layer probes)
+  - as_text()              -> collective wire bytes (trip-count aware)
+
+Import note: callers must set XLA_FLAGS=--xla_force_host_platform_device_count
+BEFORE importing jax (dryrun.py does); this module never sets it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (DECODE, ENCDEC, HYBRID, PREFILL, TRAIN,
+                          OptimizerConfig, ShapeConfig, SHAPES, TrainConfig)
+from repro.configs import get_arch
+from repro.launch import hlo_analysis as HLO
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import get_model
+from repro.models.params import abstract_params, param_shardings
+from repro.models.sharding import logical_to_pspec, rules_ctx
+from repro.train import loop as TL
+
+# TPU v5e hardware constants (per chip)
+HW = {"peak_flops_bf16": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
+      "hbm_bytes": 16e9}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh, *,
+               cfg=None, remat: str = "full", rules_override=None,
+               microbatch: int = 0):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, meta).
+
+    ``rules_override`` remaps logical sharding axes (e.g. {"fsdp": ()} for
+    pure-TP serving, {"tp": (), "batch": ("pod","data","model")} for
+    pure-DP small models) — the §Perf hillclimbing lever.
+    """
+    spec = get_arch(arch_id)
+    cfg = cfg if cfg is not None else spec.full
+    shape = SHAPES[shape_name]
+    model = get_model(cfg)
+    ov = rules_override
+    ns = lambda pspec: NamedSharding(mesh, pspec)
+    input_sh = {k: ns(v)
+                for k, v in model.input_pspecs(shape, mesh, ov).items()}
+
+    if shape.kind == TRAIN:
+        tcfg = TrainConfig(seq_len=shape.seq_len, global_batch=shape.global_batch,
+                           remat=remat, microbatch=microbatch,
+                           optimizer=OptimizerConfig())
+        fn = TL.make_train_step(model, tcfg)
+        state = TL.abstract_state(model, tcfg.optimizer)
+        state_sh = jax.tree.map(ns, TL.state_pspecs(model, tcfg.optimizer,
+                                                    mesh, ov))
+        args = (state, model.input_specs(shape))
+        in_sh = (state_sh, input_sh)
+        out_sh = (state_sh, None)
+    elif shape.kind == PREFILL:
+        fn = lambda params, batch: model.prefill(params, batch)
+        params = model.abstract()
+        params_sh = model.shardings(mesh, ov)
+        cache_sh = model.cache_shardings(shape.global_batch, shape.seq_len,
+                                         mesh, ov)
+        logits_sh = ns(logical_to_pspec(("batch", "tp"),
+                                        (shape.global_batch, cfg.vocab_size),
+                                        mesh, ov))
+        args = (params, model.input_specs(shape))
+        in_sh = (params_sh, input_sh)
+        out_sh = (logits_sh, cache_sh)
+    elif shape.kind == DECODE:
+        fn = lambda params, cache, tokens: model.decode(params, cache, tokens)
+        params = model.abstract()
+        params_sh = model.shardings(mesh, ov)
+        cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+        cache_sh = model.cache_shardings(shape.global_batch, shape.seq_len,
+                                         mesh, ov)
+        logits_sh = ns(logical_to_pspec(("batch", "tp"),
+                                        (shape.global_batch, cfg.vocab_size),
+                                        mesh, ov))
+        args = (params, cache, model.input_specs(shape)["tokens"])
+        in_sh = (params_sh, cache_sh, input_sh["tokens"])
+        out_sh = (logits_sh, cache_sh)
+    else:
+        raise ValueError(shape.kind)
+
+    meta = {"arch": arch_id, "shape": shape_name, "kind": shape.kind,
+            "devices": int(mesh.devices.size), "remat": remat,
+            "params": model.param_count()}
+    return fn, args, in_sh, out_sh, meta
+
+
+def lower_and_compile(arch_id: str, shape_name: str, mesh, *,
+                      cfg=None, remat: str = "full", rules_override=None,
+                      microbatch: int = 0):
+    fn, args, in_sh, out_sh, meta = build_cell(
+        arch_id, shape_name, mesh, cfg=cfg, remat=remat,
+        rules_override=rules_override, microbatch=microbatch)
+    t0 = time.perf_counter()
+    with mesh, rules_ctx(rules_override):
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+    t2 = time.perf_counter()
+    meta["lower_s"] = t1 - t0
+    meta["compile_s"] = t2 - t1
+    return compiled, meta
+
+
+# ---------------------------------------------------------------------------
+# Marginal-layer FLOPs probes (exact per-layer HLO cost, no while undercount)
+# ---------------------------------------------------------------------------
+
+def _probe_cfg(cfg, n_layers: int, n_enc: Optional[int] = None,
+               attn: str = "ref"):
+    kw = dict(n_layers=n_layers, scan_unroll=True, attn_impl=attn)
+    if n_enc is not None:
+        kw["n_enc_layers"] = n_enc
+    return dataclasses.replace(cfg, **kw)
+
+
+def probe_flops(arch_id: str, shape_name: str, mesh, *, remat: str = "full",
+                attn: str = "ref", rules_override=None) -> dict:
+    """Compile tiny-depth unrolled variants; extrapolate exact full-depth cost.
+
+    Returns per-device {flops, bytes_accessed} for the full architecture.
+    """
+    spec = get_arch(arch_id)
+    cfg = spec.full
+
+    def cost_of(pcfg):
+        compiled, _ = lower_and_compile(arch_id, shape_name, mesh,
+                                        cfg=pcfg, remat=remat,
+                                        rules_override=rules_override)
+        return HLO.cost_stats(compiled)
+
+    if cfg.family == HYBRID:
+        pat = len(cfg.block_pattern)
+        n_super = cfg.n_layers // pat
+        n_trail = cfg.n_layers - n_super * pat
+        f3 = cost_of(_probe_cfg(cfg, pat, attn=attn))
+        f6 = cost_of(_probe_cfg(cfg, 2 * pat, attn=attn))
+        out = {}
+        f5 = cost_of(_probe_cfg(cfg, pat + n_trail, attn=attn)) if n_trail else None
+        for key in ("flops", "bytes_accessed"):
+            total = f3[key] + (n_super - 1) * (f6[key] - f3[key])
+            if n_trail:
+                total += f5[key] - f3[key]
+            out[key] = total
+        return out
+    if cfg.family == ENCDEC:
+        f11 = cost_of(_probe_cfg(cfg, 1, 1, attn=attn))
+        f21 = cost_of(_probe_cfg(cfg, 2, 1, attn=attn))   # +1 decoder layer
+        f12 = cost_of(_probe_cfg(cfg, 1, 2, attn=attn))   # +1 encoder layer
+        return {k: f11[k] + (cfg.n_layers - 1) * (f21[k] - f11[k])
+                + (cfg.n_enc_layers - 1) * (f12[k] - f11[k])
+                for k in ("flops", "bytes_accessed")}
+    f1 = cost_of(_probe_cfg(cfg, 1, attn=attn))
+    f2 = cost_of(_probe_cfg(cfg, 2, attn=attn))
+    return {k: f1[k] + (cfg.n_layers - 1) * (f2[k] - f1[k])
+            for k in ("flops", "bytes_accessed")}
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (6ND / 2ND) for the "useful compute" ratio
+# ---------------------------------------------------------------------------
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    """Global MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D otherwise."""
+    spec = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    n_active = spec.full.active_param_count()
+    mult = 6.0 if shape.kind == TRAIN else 2.0
+    return mult * n_active * shape.tokens_per_step
+
+
+# ---------------------------------------------------------------------------
+# Full cell analysis -> JSON
+# ---------------------------------------------------------------------------
+
+def analyze_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+                 remat: str = "full", probes: bool = True,
+                 save_dir: Optional[str] = None, verbose: bool = True) -> dict:
+    spec = get_arch(arch_id)
+    if shape_name in spec.skip_shapes:
+        result = {"arch": arch_id, "shape": shape_name,
+                  "status": "skipped", "reason": spec.skip_shapes[shape_name]}
+        if save_dir:
+            _save(save_dir, multi_pod, arch_id, shape_name, result)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    compiled, meta = lower_and_compile(arch_id, shape_name, mesh, remat=remat)
+    if verbose:
+        print(compiled.memory_analysis())
+        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+               if k in ("flops", "bytes accessed")})
+    result = {**meta, "status": "ok",
+              "memory": HLO.memory_stats(compiled),
+              "cost_raw": HLO.cost_stats(compiled),
+              "collectives": HLO.analyze_collectives(compiled.as_text()),
+              "model_flops_global": model_flops(arch_id, shape_name)}
+    if probes:
+        result["cost_probed"] = probe_flops(arch_id, shape_name, mesh, remat=remat)
+    if save_dir:
+        _save(save_dir, multi_pod, arch_id, shape_name, result)
+    return result
+
+
+def _save(save_dir: str, multi_pod: bool, arch_id: str, shape_name: str,
+          result: dict):
+    sub = os.path.join(save_dir, "multi_pod" if multi_pod else "single_pod")
+    os.makedirs(sub, exist_ok=True)
+    with open(os.path.join(sub, f"{arch_id}__{shape_name}.json"), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def cell_path(save_dir: str, multi_pod: bool, arch_id: str, shape_name: str) -> str:
+    sub = "multi_pod" if multi_pod else "single_pod"
+    return os.path.join(save_dir, sub, f"{arch_id}__{shape_name}.json")

@@ -1,0 +1,139 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimbing on the three selected cells.
+
+Each iteration: hypothesis -> change -> re-lower -> measure (collective wire
+bytes + per-device HBM are exact from the compiled artifact; flops probes on
+request). Results land in experiments/perf/<cell>__<tag>.json; the narrative
+lives in EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb [--only A1]
+"""
+import dataclasses
+import json
+import sys
+import traceback
+
+from repro.configs import get_arch
+from repro.launch import dryrun_lib as DL
+from repro.launch import hlo_analysis as HLO
+from repro.launch.mesh import make_production_mesh
+
+OUT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "..", "experiments", "perf"))
+
+PURE_DP = {"tp": (), "fsdp": (), "sp": (), "expert": (), "kv_seq": (),
+           "batch": ("pod", "data", "model")}
+SERVE_TP = {"fsdp": ()}
+
+
+def run_variant(name, arch, shape, *, cfg_kw=None, rules_override=None,
+                microbatch=0, remat="full", probes=False, mesh_shape=None):
+    if mesh_shape is None:
+        mesh = make_production_mesh(multi_pod=False)
+    else:
+        import jax
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    cfg = get_arch(arch).full
+    if cfg_kw:
+        cfg = dataclasses.replace(cfg, **cfg_kw)
+    compiled, meta = DL.lower_and_compile(
+        arch, shape, mesh, cfg=cfg, remat=remat,
+        rules_override=rules_override, microbatch=microbatch)
+    res = {**meta, "variant": name,
+           "cfg_kw": {k: str(v) for k, v in (cfg_kw or {}).items()},
+           "rules_override": {k: list(v) for k, v in (rules_override or {}).items()},
+           "microbatch": microbatch,
+           "memory": HLO.memory_stats(compiled),
+           "cost_raw": HLO.cost_stats(compiled),
+           "collectives": HLO.analyze_collectives(compiled.as_text()),
+           "model_flops_global": DL.model_flops(arch, shape)}
+    if probes:
+        res["cost_probed"] = DL.probe_flops(arch, shape, mesh, remat=remat,
+                                            rules_override=rules_override)
+        res["cost_probed_flash"] = DL.probe_flops(
+            arch, shape, mesh, remat=remat, attn="chunked",
+            rules_override=rules_override)
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{arch}__{shape}__{name}.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    wire = res["collectives"]["total_wire_bytes"]
+    peak = res["memory"]["peak_bytes"]
+    print(f"  [{name}] wire {wire/1e9:8.2f} GB/dev -> {wire/DL.HW['ici_bw']:7.3f} s  "
+          f"peak HBM {peak/1e9:6.2f} GB  compile {meta['compile_s']:.0f}s",
+          flush=True)
+    return res
+
+
+VARIANTS = {
+    # --- Cell A: chameleon-34b train_4k (most collective-bound) ----------
+    "A1": lambda: run_variant("A1_bf16_gather", "chameleon-34b", "train_4k"),
+    "A0": lambda: run_variant("A0_f32_gather", "chameleon-34b", "train_4k",
+                              cfg_kw={"cast_weights": False}),
+    "A2": lambda: run_variant("A2_bf16_microbatch128", "chameleon-34b",
+                              "train_4k", microbatch=128),
+    "A3": lambda: run_variant("A3_bf16_mb64", "chameleon-34b", "train_4k",
+                              microbatch=64),
+    "A4": lambda: run_variant("A4_no_sp", "chameleon-34b", "train_4k",
+                              cfg_kw={"seq_shard": False}),
+    "A6": lambda: run_variant("A6_mesh64x4", "chameleon-34b", "train_4k",
+                              mesh_shape=(64, 4), microbatch=128),
+    "A7": lambda: run_variant("A7_mesh64x4_final", "chameleon-34b",
+                              "train_4k", mesh_shape=(64, 4), microbatch=128,
+                              probes=True),
+    "A8": lambda: run_variant("A8_mesh128x2", "chameleon-34b", "train_4k",
+                              mesh_shape=(128, 2), microbatch=128),
+    "A9": lambda: run_variant("A9_mesh256x1_fsdp", "chameleon-34b",
+                              "train_4k", mesh_shape=(256, 1)),
+    "A10": lambda: run_variant("A10_fsdp_final", "chameleon-34b", "train_4k",
+                               mesh_shape=(256, 1), probes=True),
+    "B3": lambda: run_variant("B3_pure_dp_final", "smollm-135m", "train_4k",
+                              rules_override=PURE_DP, remat="none",
+                              probes=True),
+    "A2F": lambda: run_variant("A2F_final_probe", "chameleon-34b", "train_4k",
+                               microbatch=128, probes=True),
+    "A5": lambda: run_variant("A5_no_sp_mb128", "chameleon-34b", "train_4k",
+                              cfg_kw={"seq_shard": False}, microbatch=128),
+    # --- Cell B: smollm-135m train_4k (worst roofline fraction) ----------
+    "B0": lambda: run_variant("B0_baseline_sharded", "smollm-135m", "train_4k",
+                              cfg_kw={"cast_weights": False}),
+    "B1": lambda: run_variant("B1_pure_dp", "smollm-135m", "train_4k",
+                              rules_override=PURE_DP, probes=True),
+    "B2": lambda: run_variant("B2_pure_dp_nomat", "smollm-135m", "train_4k",
+                              rules_override=PURE_DP, remat="none",
+                              probes=True),
+    "D1": lambda: run_variant("D1_dbrx_mb64", "dbrx-132b", "train_4k",
+                              microbatch=64),
+    "D2": lambda: run_variant("D2_dbrx_fsdp_ep", "dbrx-132b", "train_4k",
+                              mesh_shape=(16, 16), microbatch=32),
+    "D3": lambda: run_variant("D3_dbrx_mb16", "dbrx-132b", "train_4k",
+                              microbatch=16),
+    # --- Cell C: starcoder2-15b decode_32k (serving; paper-representative)
+    "C0": lambda: run_variant("C0_fsdp_f32", "starcoder2-15b", "decode_32k",
+                              cfg_kw={"cast_weights": False}),
+    "C1": lambda: run_variant("C1_fsdp_bf16", "starcoder2-15b", "decode_32k"),
+    "C2": lambda: run_variant("C2_pure_tp", "starcoder2-15b", "decode_32k",
+                              rules_override=SERVE_TP,
+                              cfg_kw={"param_dtype": "bfloat16"},
+                              probes=True),
+}
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+    only = None
+    if "--only" in argv:
+        only = argv[argv.index("--only") + 1].split(",")
+    for key, fn in VARIANTS.items():
+        if only and key not in only:
+            continue
+        print(f"=== {key} ===", flush=True)
+        try:
+            fn()
+        except Exception as e:
+            traceback.print_exc()
+            print(f"  FAIL {e!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

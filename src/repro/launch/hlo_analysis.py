@@ -1,0 +1,184 @@
+"""Post-SPMD HLO analysis: collective bytes with while-loop trip counts.
+
+``compiled.cost_analysis()`` does not multiply while-loop bodies by their
+trip counts (scan-over-layers would undercount by ~n_layers), and it reports
+no collective traffic at all. This module parses ``compiled.as_text()``:
+
+  1. split the module into computations,
+  2. record every collective op's (kind, result bytes, group size),
+  3. walk the call graph from ENTRY, multiplying while bodies by the
+     ``known_trip_count`` XLA annotates after loop analysis,
+  4. convert to bytes-on-the-wire per device with standard ring-algorithm
+     cost models.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.+\s\{")
+_OP_RE = re.compile(
+    r"=\s+(\(?[\w\[\]\{\},\s\/]*?\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?n["\s:]+"?(\d+)')
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _wire_bytes(kind: str, result_bytes: int, n: int) -> float:
+    """Ring-algorithm bytes moved per participating device."""
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if kind == "all-gather":
+        return result_bytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(result_bytes) * (n - 1)   # result is the scattered shard
+    if kind == "all-to-all":
+        return result_bytes * (n - 1) / n
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+@dataclass
+class Computation:
+    name: str
+    collectives: list = field(default_factory=list)   # (kind, bytes, group_n)
+    calls: list = field(default_factory=list)         # (callee, multiplier)
+
+
+def _parse_computations(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_START_RE.match(line.strip()) if "{" in line else None
+        if m and not line.lstrip().startswith("%constant"):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.search(line)
+        if om:
+            result_bytes = _shape_bytes(om.group(1))
+            kind = om.group(2)
+            n = 0
+            gb = _GROUPS_BRACE_RE.search(line)
+            if gb:
+                n = len(gb.group(1).split(","))
+            else:
+                gi = _GROUPS_IOTA_RE.search(line)
+                if gi:
+                    n = int(gi.group(2))       # [num_groups, group_size]
+            if kind == "all-reduce" and result_bytes and "-done" not in line:
+                cur.collectives.append((kind, result_bytes, max(n, 1)))
+            elif kind != "all-reduce" and "-done" not in line:
+                cur.collectives.append((kind, result_bytes, max(n, 1)))
+        if " while(" in line:
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            bm = re.search(r"body=%?([\w\.\-]+)", line)
+            if bm:
+                cur.calls.append((bm.group(1), trip))
+        elif "to_apply=" in line or "calls=" in line:
+            for callee in _CALL_RE.findall(line):
+                cur.calls.append((callee, 1))
+
+
+    return comps
+
+
+def analyze_collectives(text: str) -> dict:
+    """Returns {total_wire_bytes, per_kind: {kind: {count, wire_bytes}}}."""
+    comps = _parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: treat every computation once
+        entry_names = list(comps)
+    else:
+        entry_names = [entry]
+
+    per_kind: dict = defaultdict(lambda: {"count": 0.0, "wire_bytes": 0.0,
+                                          "result_bytes": 0.0})
+    visiting: set = set()
+
+    def walk(name: str, mult: float):
+        if name not in comps or name in visiting:
+            return
+        visiting.add(name)
+        c = comps[name]
+        for kind, rb, n in c.collectives:
+            wb = _wire_bytes(kind, rb, n)
+            per_kind[kind]["count"] += mult
+            per_kind[kind]["wire_bytes"] += wb * mult
+            per_kind[kind]["result_bytes"] += rb * mult
+        for callee, m in c.calls:
+            walk(callee, mult * m)
+        visiting.discard(name)
+
+    for en in entry_names:
+        walk(en, 1.0)
+
+    total = sum(v["wire_bytes"] for v in per_kind.values())
+    return {"total_wire_bytes": total,
+            "per_kind": {k: dict(v) for k, v in per_kind.items()}}
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_bytes": int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                          + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+    }
+
+
+def cost_stats(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    get = lambda k: float(ca.get(k, 0.0) or 0.0)
+    return {"flops": get("flops"),
+            "transcendentals": get("transcendentals"),
+            "bytes_accessed": get("bytes accessed")}

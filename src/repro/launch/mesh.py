@@ -1,0 +1,34 @@
+"""Mesh construction. Functions only — importing this never touches jax
+device state (required: the dry-run sets XLA_FLAGS before first jax init)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.config import MeshConfig
+
+# Production topology: one v5e pod = 16x16 = 256 chips; multi-pod = 2 pods.
+SINGLE_POD = MeshConfig(data=16, model=16, pod=1)
+MULTI_POD = MeshConfig(data=16, model=16, pod=2)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig) -> Mesh:
+    return jax.make_mesh(cfg.shape(), cfg.axis_names())
+
+
+def make_local_mesh(data: int = 0, model: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    if data == 0:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def describe(mesh: Mesh) -> dict:
+    return {"axes": dict(mesh.shape), "devices": mesh.devices.size}

@@ -1,0 +1,46 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Augment single-pod dry-run JSONs with flash-attention byte probes.
+
+The flops probes use materializing reference attention (exact FLOPs, but
+bytes inflated by the (Sq,Skv) logits the TPU flash kernel never writes to
+HBM). This pass re-probes with the chunked/flash lowering for the memory
+roofline term: matmul/projection bytes exact; attention HBM traffic is the
+flash kernel's O(q+k+v+o) (its internal block loops are counted once, which
+matches a kernel that streams blocks through VMEM).
+"""
+import json, sys, traceback
+
+from repro.config import SHAPES
+from repro.configs.registry import all_cells
+from repro.launch import dryrun_lib as DL
+from repro.launch.dryrun import DEFAULT_SAVE
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    save_dir = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else DEFAULT_SAVE)
+    mesh = make_production_mesh(multi_pod=False)
+    for arch, shape, status in all_cells():
+        if status != "run":
+            continue
+        path = DL.cell_path(save_dir, False, arch, shape)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            res = json.load(f)
+        if res.get("status") != "ok" or "cost_probed_flash" in res:
+            continue
+        print(f"=== bytes probe {arch} x {shape} ===", flush=True)
+        try:
+            res["cost_probed_flash"] = DL.probe_flops(
+                arch, shape, mesh, remat=res.get("remat", "full"), attn="chunked")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"  FAIL {e!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

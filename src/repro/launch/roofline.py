@@ -1,0 +1,129 @@
+"""Roofline analysis from the dry-run artifacts (single-pod, per §Roofline).
+
+Terms per (arch × shape) cell, all in seconds-per-step on TPU v5e:
+
+  compute_term    = HLO_FLOPs/device ÷ 197 TFLOP/s      (probed, exact: the
+                    marginal-layer probes count every scan iteration)
+  memory_term     = HLO_bytes/device ÷ 819 GB/s          (flash-attention
+                    byte probes: no materialized S² logits)
+  collective_term = wire_bytes/device ÷ 50 GB/s          (trip-count-aware
+                    HLO parse, ring cost models)
+
+Also: MODEL_FLOPS = 6·N·D (train) / 2·N·D (serve) with N = active params;
+the useful-compute ratio MODEL_FLOPS/HLO_FLOPs (catches remat/dispatch
+waste); the dominant term; and a per-cell bottleneck note.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--save-dir D] [--csv out]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.config import parse_cli
+from repro.configs.registry import all_cells
+from repro.launch.dryrun_lib import HW
+
+DEFAULT_SAVE = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "dryrun")
+
+NOTES = {
+    "compute": "compute-bound: more MXU efficiency (fusion, larger blocks) "
+               "or fewer redundant FLOPs (remat policy) moves it",
+    "memory": "HBM-bound: reduce bytes/step (bf16 master copies, fused "
+              "layers, smaller logit blocks) or raise arithmetic intensity",
+    "collective": "ICI-bound: cut wire bytes (sharding that avoids gathers, "
+                  "compressed grads, a2a instead of psum for MoE combine)",
+}
+
+
+def load_cells(save_dir: str) -> list:
+    rows = []
+    for arch, shape, status in all_cells():
+        path = os.path.join(save_dir, "single_pod", f"{arch}__{shape}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            res = json.load(f)
+        rows.append(res)
+    return rows
+
+
+def roofline_row(res: dict) -> dict:
+    if res.get("status") != "ok":
+        return {"arch": res["arch"], "shape": res["shape"],
+                "status": res.get("reason", res.get("status"))}
+    n_dev = res["devices"]
+    flops_dev = (res.get("cost_probed") or res["cost_raw"])["flops"]
+    bytes_dev = (res.get("cost_probed_flash")
+                 or res.get("cost_probed")
+                 or res["cost_raw"])["bytes_accessed"]
+    wire_dev = res["collectives"]["total_wire_bytes"]
+    compute_s = flops_dev / HW["peak_flops_bf16"]
+    memory_s = bytes_dev / HW["hbm_bw"]
+    collective_s = wire_dev / HW["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    model_flops_dev = res["model_flops_global"] / n_dev
+    bound = max(terms.values())
+    ideal = model_flops_dev / HW["peak_flops_bf16"]
+    return {
+        "arch": res["arch"], "shape": res["shape"], "status": "ok",
+        "devices": n_dev,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops_global": res["model_flops_global"],
+        "useful_ratio": model_flops_dev / max(flops_dev, 1e-30),
+        "roofline_fraction": ideal / max(bound, 1e-30),
+        "peak_hbm_gb": res["memory"]["peak_bytes"] / 1e9,
+        "fits_hbm": res["memory"]["peak_bytes"] <= HW["hbm_bytes"],
+        "note": NOTES[dominant],
+    }
+
+
+def markdown_table(rows: list) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | roofline frac | HBM GB/dev | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | "
+                       f"— | — | — | ({r['status'][:40]}…) |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['peak_hbm_gb']:.1f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    args = parse_cli(argv if argv is not None else sys.argv[1:])
+    save_dir = os.path.abspath(args.get("save-dir", DEFAULT_SAVE))
+    rows = [roofline_row(r) for r in load_cells(save_dir)]
+    print(markdown_table(rows))
+    out_json = os.path.join(save_dir, "roofline.json")
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {out_json} ({sum(1 for r in rows if r.get('status')=='ok')} ok rows)")
+    if "csv" in args:
+        import csv
+        keys = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+                "dominant", "useful_ratio", "roofline_fraction", "peak_hbm_gb"]
+        with open(args["csv"], "w", newline="") as f:
+            w = csv.DictWriter(f, keys, extrasaction="ignore")
+            w.writeheader()
+            for r in rows:
+                if r.get("status") == "ok":
+                    w.writerow(r)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

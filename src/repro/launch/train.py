@@ -1,0 +1,84 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke true \
+      --steps 50 --global-batch 8 --seq-len 128 [--carbon-target 80 --region NL]
+
+With --carbon-target the job runs inside a Carbon Container (live
+enforcement: duty-cycling + elastic slice migration + suspend/resume).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+import jax
+
+from repro.config import (CarbonConfig, OptimizerConfig, TrainConfig,
+                          parse_cli)
+from repro.configs import get_arch
+from repro.data.pipeline import markov_stream
+from repro.models.api import get_model
+from repro.train import loop as TL
+
+
+def main(argv=None) -> int:
+    args = parse_cli(argv if argv is not None else sys.argv[1:])
+    arch = args.get("arch", "smollm-135m")
+    spec = get_arch(arch)
+    cfg = spec.smoke if args.get("smoke", "true") != "false" else spec.full
+    model = get_model(cfg)
+    tcfg = TrainConfig(
+        seq_len=int(args.get("seq-len", 128)),
+        global_batch=int(args.get("global-batch", 8)),
+        steps=int(args.get("steps", 50)),
+        microbatch=int(args.get("microbatch", 0)),
+        remat=args.get("remat", "none"),
+        optimizer=OptimizerConfig(
+            lr=float(args.get("lr", 1e-3)),
+            warmup_steps=int(args.get("warmup", 10)),
+            total_steps=int(args.get("steps", 50)),
+            compression=args.get("compression", "none")),
+        log_every=int(args.get("log-every", 10)),
+    )
+    data = markov_stream(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch,
+                         seed=tcfg.seed)
+
+    if "carbon-target" in args:
+        from repro.carbon.intensity import TraceProvider
+        from repro.cluster.slices import tpu_v5e_family
+        from repro.core.carbon_aware_trainer import CarbonAwareTrainer
+        from repro.core.elastic import ElasticJob
+        devs = jax.devices()
+        family = tpu_v5e_family()
+        # map family slices onto available devices (demo scale: slice i gets
+        # 2^i devices, capped at what exists)
+        n = len(devs)
+        slice_devs = [devs[:max(1, min(n, 2 ** i))] for i in range(len(family))]
+        ckpt = args.get("ckpt-dir", tempfile.mkdtemp(prefix="lxcc_"))
+        job = ElasticJob(model, tcfg, ckpt)
+        job.start(slice_devs[family.baseline_idx])
+        ccfg = CarbonConfig(target_rate=float(args["carbon-target"]),
+                            policy=args.get("policy", "energy"),
+                            region=args.get("region", "NL"))
+        step_flops = 6.0 * model.param_count() * tcfg.seq_len * tcfg.global_batch
+        trainer = CarbonAwareTrainer(
+            job=job, family=family, slice_devices=slice_devs,
+            carbon=TraceProvider.for_region(ccfg.region),
+            cfg=ccfg, step_flops=step_flops,
+            step_tokens=tcfg.seq_len * tcfg.global_batch,
+            sim_seconds_per_step=float(args.get("sim-step-s", 60.0)))
+        out = trainer.run(data, tcfg.steps)
+        print(f"done: {out['steps']} steps, {len(out['migrations'])} migrations")
+        for log in out["logs"][-5:]:
+            print(f"  t={log.t/3600:.1f}h slice={log.slice_name} duty={log.duty:.2f} "
+                  f"C={log.carbon_rate:.0f} g/hr ({log.action})")
+        return 0
+
+    out = TL.run(model, tcfg, data)
+    print(f"final loss {out['history'][-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

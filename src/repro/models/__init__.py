@@ -1,0 +1,4 @@
+"""Model substrate: the 10 assigned architectures as composable JAX modules."""
+from repro.models.api import get_model, Model
+
+__all__ = ["get_model", "Model"]

@@ -1,0 +1,127 @@
+"""Unified model facade: family dispatch + input specs per assigned shape.
+
+``Model`` wraps a family module behind one interface used by the train loop,
+the serve engine, the dry-run launcher, and the benchmarks:
+
+    m = get_model(cfg)
+    params = m.init(key)                     # or m.abstract() for dry-runs
+    loss, metrics = m.loss(params, batch)
+    logits, cache = m.prefill(params, batch)
+    logits, cache = m.decode(params, cache, tokens)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (DECODE, ENCDEC, HYBRID, MOE, PREFILL, SSM, TRAIN,
+                          ModelConfig, ShapeConfig)
+from repro.models import encdec, mamba2, rglru, transformer
+from repro.models import params as PT
+from repro.models.sharding import logical_to_pspec
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    MOE: transformer,
+    SSM: mamba2,
+    HYBRID: rglru,
+    ENCDEC: encdec,
+}
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def mod(self):
+        return _FAMILY_MODULES[self.cfg.family]
+
+    # -- parameters ---------------------------------------------------------
+    def specs(self):
+        return self.mod.specs(self.cfg)
+
+    def init(self, key: jax.Array):
+        return PT.init_params(self.specs(), key)
+
+    def abstract(self):
+        return PT.abstract_params(self.specs())
+
+    def pspecs(self, mesh, overrides=None):
+        return PT.param_pspecs(self.specs(), mesh, overrides)
+
+    def shardings(self, mesh, overrides=None):
+        return PT.param_shardings(self.specs(), mesh, overrides)
+
+    def param_count(self) -> int:
+        return PT.param_count_tree(self.specs())
+
+    # -- compute ------------------------------------------------------------
+    def loss(self, params, batch, remat: str = "none"):
+        return self.mod.loss_fn(self.cfg, params, batch, remat=remat)
+
+    def prefill(self, params, batch, pad_to: int = 0):
+        return self.mod.prefill(self.cfg, params, batch, pad_to=pad_to)
+
+    def decode(self, params, cache, tokens):
+        return self.mod.decode_step(self.cfg, params, cache, tokens)
+
+    # -- caches --------------------------------------------------------------
+    def cache_specs(self, batch: int, max_seq: int):
+        return self.mod.cache_specs(self.cfg, batch, max_seq)
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        return PT.abstract_params(self.cache_specs(batch, max_seq))
+
+    def init_cache(self, batch: int, max_seq: int, key: Optional[jax.Array] = None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return PT.init_params(self.cache_specs(batch, max_seq), key)
+
+    def cache_pspecs(self, batch: int, max_seq: int, mesh, overrides=None):
+        return PT.param_pspecs(self.cache_specs(batch, max_seq), mesh, overrides)
+
+    def cache_shardings(self, batch: int, max_seq: int, mesh, overrides=None):
+        return PT.param_shardings(self.cache_specs(batch, max_seq), mesh,
+                                  overrides)
+
+    # -- inputs ---------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+        if shape.kind == TRAIN:
+            out = {"tokens": tok(B, S), "labels": tok(B, S)}
+        elif shape.kind == PREFILL:
+            out = {"tokens": tok(B, S)}
+        elif shape.kind == DECODE:
+            out = {"tokens": tok(B)}
+        else:
+            raise ValueError(shape.kind)
+        if self.cfg.family == ENCDEC and shape.kind in (TRAIN, PREFILL):
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, self.cfg.enc_seq, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
+        return out
+
+    def input_axes(self, shape: ShapeConfig) -> dict:
+        if shape.kind == TRAIN:
+            out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        elif shape.kind == PREFILL:
+            out = {"tokens": ("batch", "seq")}
+        else:
+            out = {"tokens": ("batch",)}
+        if self.cfg.family == ENCDEC and shape.kind in (TRAIN, PREFILL):
+            out["frames"] = ("batch", "seq", None)
+        return out
+
+    def input_pspecs(self, shape: ShapeConfig, mesh, overrides=None) -> dict:
+        specs = self.input_specs(shape)
+        axes = self.input_axes(shape)
+        return {k: logical_to_pspec(axes[k], specs[k].shape, mesh, overrides)
+                for k in specs}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,85 @@
+"""Decode-state descriptors (KV caches / SSM states) as ParamSpec trees.
+
+Caches reuse the ParamSpec machinery so abstract shapes (dry-run) and
+PartitionSpecs come from the same declaration as real allocation.
+
+KV caches are laid out (L, B, Hkv, Smax, Dh) with the *sequence* dim sharded
+on the "model" axis ("kv_seq" rule) — the flash-decoding pattern: each model
+shard holds a slice of history, decode attention does partial-softmax +
+all-reduce of (B,Hq) stats instead of replicating the cache.
+"""
+from __future__ import annotations
+
+from repro.config import ModelConfig
+from repro.models.params import ParamSpec
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                   n_layers: int = 0) -> dict:
+    L = n_layers or cfg.n_layers
+    kv_shape = (L, batch, cfg.n_kv_heads, max_seq, cfg.head_dim)
+    kv_axes = ("layers", "batch", None, "kv_seq", None)
+    return {
+        "k": ParamSpec(kv_shape, kv_axes, init="zeros", dtype=cfg.dtype),
+        "v": ParamSpec(kv_shape, kv_axes, init="zeros", dtype=cfg.dtype),
+        "pos": ParamSpec((), (), init="zeros", dtype="int32"),
+    }
+
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    L = cfg.n_layers
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+    return {
+        "conv": ParamSpec((L, batch, cfg.ssm_conv_width - 1, conv_dim),
+                          ("layers", "batch", None, "tp"), init="zeros", dtype=cfg.dtype),
+        "ssm": ParamSpec((L, batch, cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                         ("layers", "batch", "tp", None, None), init="zeros",
+                         dtype="float32"),
+        "pos": ParamSpec((), (), init="zeros", dtype="int32"),
+    }
+
+
+def hybrid_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    """RecurrentGemma: 12 scanned (rec,rec,attn) superlayers + 2 trailing rec."""
+    n_super = cfg.n_layers // len(cfg.block_pattern)
+    n_trail = cfg.n_layers - n_super * len(cfg.block_pattern)
+    w = min(cfg.local_window, 1 << 30)
+    lw, cw = cfg.lru_width, cfg.conv_width
+    def rec_state(n):
+        return {
+            "h": ParamSpec((n, batch, lw), ("layers", "batch", "tp"),
+                           init="zeros", dtype="float32"),
+            "conv": ParamSpec((n, batch, cw - 1, lw), ("layers", "batch", None, "tp"),
+                              init="zeros", dtype=cfg.dtype),
+        }
+    out = {
+        "super": {
+            "rec1": rec_state(n_super),
+            "rec2": rec_state(n_super),
+            "k": ParamSpec((n_super, batch, cfg.n_kv_heads, w, cfg.head_dim),
+                           ("layers", "batch", None, "kv_seq", None),
+                           init="zeros", dtype=cfg.dtype),
+            "v": ParamSpec((n_super, batch, cfg.n_kv_heads, w, cfg.head_dim),
+                           ("layers", "batch", None, "kv_seq", None),
+                           init="zeros", dtype=cfg.dtype),
+        },
+        "pos": ParamSpec((), (), init="zeros", dtype="int32"),
+    }
+    if n_trail:
+        out["trail"] = rec_state(n_trail)
+    return out
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Whisper: decoder self-attn cache + encoder cross-attn KV."""
+    L = cfg.n_layers
+    self_shape = (L, batch, cfg.n_kv_heads, max_seq, cfg.head_dim)
+    cross_shape = (L, batch, cfg.n_kv_heads, cfg.enc_seq, cfg.head_dim)
+    axes = ("layers", "batch", None, "kv_seq", None)
+    return {
+        "k": ParamSpec(self_shape, axes, init="zeros", dtype=cfg.dtype),
+        "v": ParamSpec(self_shape, axes, init="zeros", dtype=cfg.dtype),
+        "ck": ParamSpec(cross_shape, axes, init="zeros", dtype=cfg.dtype),
+        "cv": ParamSpec(cross_shape, axes, init="zeros", dtype=cfg.dtype),
+        "pos": ParamSpec((), (), init="zeros", dtype="int32"),
+    }

@@ -1,0 +1,200 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, enc_seq, d_model). Positions are
+sinusoidal on both sides (deviation from Whisper's learned decoder
+positions; noted in DESIGN.md). Projection biases are omitted (negligible).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.cache import encdec_cache_specs
+from repro.models.params import ParamSpec, stack_specs
+from repro.models.sharding import constrain
+from repro.models.transformer import chunked_ce_loss, embed_tokens, maybe_remat, unembed
+
+
+def enc_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.norm_specs(cfg.d_model, cfg.norm_kind),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg.d_model, cfg.norm_kind),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.norm_specs(cfg.d_model, cfg.norm_kind),
+        "attn": L.attention_specs(cfg),
+        "lnx": L.norm_specs(cfg.d_model, cfg.norm_kind),
+        "xattn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg.d_model, cfg.norm_kind),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def specs(cfg: ModelConfig) -> dict:
+    out = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("tp", "fsdp"), init="normal"),
+        "enc_layers": stack_specs(cfg.n_enc_layers, enc_layer_specs(cfg)),
+        "enc_norm": L.norm_specs(cfg.d_model, cfg.norm_kind),
+        "dec_layers": stack_specs(cfg.n_layers, dec_layer_specs(cfg)),
+        "final_norm": L.norm_specs(cfg.d_model, cfg.norm_kind),
+    }
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("fsdp", "tp"),
+                                   init="scaled")
+    return out
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array,
+           remat: str = "none") -> jax.Array:
+    """frames (B, enc_seq, D) -> memory (B, enc_seq, D)."""
+    S = frames.shape[1]
+    pos = L.sinusoidal_positions(S, cfg.d_model).astype(cfg.dtype)
+    x = frames.astype(cfg.dtype) + pos[None]
+    x = constrain(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(cfg, lp["attn"], h, None)
+        o = L.attention(q, k, v, causal=False, impl=cfg.attn_impl)
+        x = x + L.output_project(cfg, lp["attn"], o)
+        x = x + L.mlp(L.apply_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"],
+                      cfg.mlp_variant, jnp.dtype(cfg.dtype))
+        return constrain(x, ("batch", "seq", None)), None
+
+    enc = L.cast_tree(params["enc_layers"], cfg.dtype) if cfg.cast_weights else params["enc_layers"]
+    x, _ = L.scan_layers(cfg, maybe_remat(body, remat), x, enc)
+    return L.apply_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(cfg, bp, x, memory=None, cached_kv=None):
+    """Cross-attention: q from x, kv from encoder memory (or cache)."""
+    h = L.apply_norm(x, bp["lnx"], cfg.norm_eps)
+    dtype = h.dtype
+    B, Sq = h.shape[0], h.shape[1]
+    q = (h @ bp["xattn"]["wq"].astype(dtype)).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    if cached_kv is not None:
+        k, v = cached_kv                                  # (B,Hkv,Senc,Dh)
+        k, v = k.swapaxes(1, 2), v.swapaxes(1, 2)
+    else:
+        Se = memory.shape[1]
+        k = (memory @ bp["xattn"]["wk"].astype(dtype)).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        v = (memory @ bp["xattn"]["wv"].astype(dtype)).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    o = L.attention(q, k, v, causal=False, impl=cfg.attn_impl)
+    return x + L.output_project(cfg, {"wo": bp["xattn"]["wo"]}, o), (k, v)
+
+
+def _decoder_embed(cfg, params, tokens, offset=0):
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    if isinstance(offset, int) and offset == 0 and S > 1:
+        pos = L.sinusoidal_positions(S, cfg.d_model).astype(cfg.dtype)[None]
+    else:
+        # decode: single position `offset`
+        full = L.sinusoidal_positions(1, cfg.d_model)  # placeholder row
+        ang_pos = jnp.asarray(offset, jnp.float32)
+        half = cfg.d_model // 2
+        freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+        ang = ang_pos * freqs
+        pos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(cfg.dtype)
+        del full
+    return x + pos
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, remat: str = "none"):
+    memory = encode(cfg, params, batch["frames"], remat=remat)
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = _decoder_embed(cfg, params, tokens)
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(cfg, lp["attn"], h, positions)
+        o = L.attention(q, k, v, causal=True, impl=cfg.attn_impl)
+        x = x + L.output_project(cfg, lp["attn"], o)
+        x, _ = _cross_attend(cfg, lp, x, memory=memory)
+        x = x + L.mlp(L.apply_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"],
+                      cfg.mlp_variant, jnp.dtype(cfg.dtype))
+        return constrain(x, L.residual_axes(cfg)), None
+
+    dec = L.cast_tree(params["dec_layers"], cfg.dtype) if cfg.cast_weights else params["dec_layers"]
+    x, _ = L.scan_layers(cfg, maybe_remat(body, remat), x, dec)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    loss = chunked_ce_loss(cfg, params, x, batch["labels"])
+    return loss, {"ce_loss": loss}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            pad_to: int = 0):
+    memory = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _decoder_embed(cfg, params, tokens)
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(cfg, lp["attn"], h, positions)
+        o = L.attention(q, k, v, causal=True, impl=cfg.attn_impl)
+        x = x + L.output_project(cfg, lp["attn"], o)
+        x, (xk, xv) = _cross_attend(cfg, lp, x, memory=memory)
+        x = x + L.mlp(L.apply_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"],
+                      cfg.mlp_variant, jnp.dtype(cfg.dtype))
+        x = constrain(x, ("batch", "seq", None))
+        return x, (k.swapaxes(1, 2), v.swapaxes(1, 2),
+                   xk.swapaxes(1, 2), xv.swapaxes(1, 2))
+
+    dec = L.cast_tree(params["dec_layers"], cfg.dtype) if cfg.cast_weights else params["dec_layers"]
+    x, (ck, cv, cxk, cxv) = L.scan_layers(cfg, body, x, dec)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, -1:, :])[:, 0]
+    if pad_to > S:
+        pad = ((0, 0), (0, 0), (0, 0), (0, pad_to - S), (0, 0))
+        ck, cv = jnp.pad(ck, pad), jnp.pad(cv, pad)
+    axes = ("layers", "batch", None, "kv_seq", None)
+    cache = {"k": constrain(ck, axes), "v": constrain(cv, axes),
+             "ck": constrain(cxk, axes), "cv": constrain(cxv, axes),
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array):
+    pos = cache["pos"]
+    x = _decoder_embed(cfg, params, tokens[:, None], offset=pos)
+
+    def body(x, xs):
+        lp, ck, cv, cxk, cxv = xs
+        h = L.apply_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(cfg, lp["attn"], h, None)
+        ck = jax.lax.dynamic_update_slice(ck, k.swapaxes(1, 2).astype(ck.dtype),
+                                          (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.swapaxes(1, 2).astype(cv.dtype),
+                                          (0, 0, pos, 0))
+        o = L.attention(q, ck.swapaxes(1, 2), cv.swapaxes(1, 2), causal=True,
+                        q_offset=pos, kv_len=pos + 1)
+        x = x + L.output_project(cfg, lp["attn"], o)
+        x, _ = _cross_attend(cfg, lp, x, cached_kv=(cxk, cxv))
+        x = x + L.mlp(L.apply_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"],
+                      cfg.mlp_variant, jnp.dtype(cfg.dtype))
+        return x, (ck, cv)
+
+    dec = L.cast_tree(params["dec_layers"], cfg.dtype) if cfg.cast_weights else params["dec_layers"]
+    x, (ck, cv) = L.scan_layers(
+        cfg, body, x, (dec, cache["k"], cache["v"],
+                       cache["ck"], cache["cv"]), length=cfg.n_layers)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)[:, 0]
+    return logits, {"k": ck, "v": cv, "ck": cache["ck"], "cv": cache["cv"],
+                    "pos": pos + 1}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return encdec_cache_specs(cfg, batch, max_seq)

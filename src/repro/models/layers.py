@@ -1,0 +1,178 @@
+"""Shared layer primitives: norms, RoPE, MLP variants, attention dispatch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SWIGLU, GEGLU, GELU
+from repro.models.params import ParamSpec
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_specs(d: int, kind: str = "rms") -> dict:
+    if kind == "rms":
+        return {"scale": ParamSpec((d,), (None,), init="zeros")}
+    return {"scale": ParamSpec((d,), (None,), init="ones"),
+            "bias": ParamSpec((d,), (None,), init="zeros")}
+
+
+def apply_norm(x, p, eps):
+    if "bias" in p:
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """x: (B, S, H, Dh), positions: (S,) or (B, S)."""
+    B, S, H, Dh = x.shape
+    half = Dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs[None, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]                    # (B,S,1,half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (S, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(seq)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d: Optional[int] = None, f: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    f = f or cfg.d_ff
+    if cfg.mlp_variant in (SWIGLU, GEGLU):
+        return {"wg": ParamSpec((d, f), ("fsdp", "tp"), init="scaled"),
+                "wi": ParamSpec((d, f), ("fsdp", "tp"), init="scaled"),
+                "wo": ParamSpec((f, d), ("tp", "fsdp"), init="scaled")}
+    return {"wi": ParamSpec((d, f), ("fsdp", "tp"), init="scaled"),
+            "wo": ParamSpec((f, d), ("tp", "fsdp"), init="scaled")}
+
+
+def mlp(x: jax.Array, p: dict, variant: str, dtype) -> jax.Array:
+    xc = x.astype(dtype)
+    if variant == SWIGLU:
+        h = jax.nn.silu(xc @ p["wg"].astype(dtype)) * (xc @ p["wi"].astype(dtype))
+    elif variant == GEGLU:
+        h = jax.nn.gelu(xc @ p["wg"].astype(dtype)) * (xc @ p["wi"].astype(dtype))
+    elif variant == GELU:
+        h = jax.nn.gelu(xc @ p["wi"].astype(dtype))
+    else:
+        raise ValueError(variant)
+    h = constrain(h, ("batch", "seq", "tp"))
+    return h @ p["wo"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projection + RoPE + kernel dispatch)
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = {"wq": ParamSpec((d, hq * dh), ("fsdp", "tp"), init="scaled"),
+           "wk": ParamSpec((d, hkv * dh), ("fsdp", "tp"), init="scaled"),
+           "wv": ParamSpec((d, hkv * dh), ("fsdp", "tp"), init="scaled"),
+           "wo": ParamSpec((hq * dh, d), ("tp", "fsdp"), init="scaled")}
+    if cfg.qk_norm:
+        out["qnorm"] = ParamSpec((dh,), (None,), init="zeros")
+        out["knorm"] = ParamSpec((dh,), (None,), init="zeros")
+    return out
+
+
+def qkv_project(cfg: ModelConfig, p: dict, x: jax.Array, positions) -> tuple:
+    """x: (B,S,D) -> q (B,S,Hq,Dh), k,v (B,S,Hkv,Dh), RoPE applied."""
+    B, S, _ = x.shape
+    dh = cfg.head_dim
+    dtype = x.dtype
+    q = (x @ p["wq"].astype(dtype)).reshape(B, S, cfg.n_heads, dh)
+    k = (x @ p["wk"].astype(dtype)).reshape(B, S, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"].astype(dtype)).reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qnorm"], cfg.norm_eps)
+        k = rmsnorm(k, p["knorm"], cfg.norm_eps)
+    if cfg.use_rope and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "tp", None))
+    k = constrain(k, ("batch", "seq", "tp", None))
+    v = constrain(v, ("batch", "seq", "tp", None))
+    return q, k, v
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, kv_len=None,
+              kv_positions=None, impl: str = "auto") -> jax.Array:
+    """Dispatch to the Pallas flash kernel (TPU) or the chunked/ref path."""
+    from repro.kernels import ops
+    return ops.mha(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                   kv_len=kv_len, kv_positions=kv_positions, impl=impl)
+
+
+def cast_tree(tree, dtype):
+    """Cast float leaves to `dtype` *while still sharded* — inside the layer
+    scan GSPMD would all-gather the f32 masters and cast after (2x wire)."""
+    import jax.numpy as jnp
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def residual_axes(cfg: ModelConfig) -> tuple:
+    """Logical axes of the residual stream between layers (train path)."""
+    return ("batch", "sp" if cfg.seq_shard else "seq", None)
+
+
+def scan_layers(cfg: ModelConfig, body, init, xs, length: Optional[int] = None):
+    """lax.scan over stacked layers; fully unrolled when cfg.scan_unroll.
+
+    Unrolling removes the HLO ``while`` so cost_analysis counts every layer
+    (used by the dry-run's marginal-flops probes); production lowering keeps
+    the rolled scan for small HLO and fast compiles.
+    """
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    unroll = length if cfg.scan_unroll else 1
+    return jax.lax.scan(body, init, xs, unroll=unroll)
+
+
+def output_project(cfg: ModelConfig, p: dict, o: jax.Array) -> jax.Array:
+    B, S = o.shape[0], o.shape[1]
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return o @ p["wo"].astype(o.dtype)

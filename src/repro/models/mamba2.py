@@ -1,0 +1,175 @@
+"""Mamba-2 (SSD / state-space duality) model: train / prefill / decode.
+
+Block: in_proj -> [z | xBC | dt]; causal depthwise conv over xBC; SSD over
+heads (chunked scan / Pallas kernel); gated RMSNorm; out_proj. Decode keeps
+O(1) state per layer: conv history (W-1 steps) + SSD state (H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.cache import ssm_cache_specs
+from repro.models.params import ParamSpec, stack_specs
+from repro.models.sharding import constrain
+from repro.models.transformer import (
+    chunked_ce_loss, embed_tokens, maybe_remat, unembed)
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    gn = cfg.ssm_n_groups * cfg.ssm_state
+    conv_dim = di + 2 * gn
+    h = cfg.ssm_n_heads
+    return di, gn, conv_dim, h
+
+
+def layer_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, gn, conv_dim, h = _dims(cfg)
+    return {
+        "ln": L.norm_specs(d),
+        "in_proj": ParamSpec((d, 2 * di + 2 * gn + h), ("fsdp", "tp"), init="scaled"),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_dim), (None, "tp"), init="normal", scale=0.1),
+        "conv_b": ParamSpec((conv_dim,), ("tp",), init="zeros"),
+        "a_log": ParamSpec((h,), ("tp",), init="ssm_a"),
+        "d_skip": ParamSpec((h,), ("tp",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("tp",), init="zeros"),
+        "gnorm": ParamSpec((di,), ("tp",), init="zeros"),
+        "out_proj": ParamSpec((di, d), ("tp", "fsdp"), init="scaled"),
+    }
+
+
+def specs(cfg: ModelConfig) -> dict:
+    out = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("tp", "fsdp"), init="normal"),
+        "final_norm": L.norm_specs(cfg.d_model),
+        "layers": stack_specs(cfg.n_layers, layer_specs(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("fsdp", "tp"),
+                                   init="scaled")
+    return out
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """RMSNormGated: rmsnorm(y * silu(z))."""
+    return L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), w, eps)
+
+
+def _mixer_seq(cfg: ModelConfig, lp: dict, x: jax.Array,
+               conv_state=None, ssm_state=None):
+    """Full-sequence mixer. x (B,S,D) -> (y (B,S,D), conv_state', ssm_state')."""
+    B, S, D = x.shape
+    di, gn, conv_dim, H = _dims(cfg)
+    dtype = x.dtype
+    proj = x @ lp["in_proj"].astype(dtype)               # (B,S,2di+2gn+h)
+    z, xbc, dt_raw = jnp.split(proj, [di, di + conv_dim], axis=-1)
+    xbc = constrain(xbc, ("batch", "seq", "tp"))
+    xc, conv_state_new = ops.causal_conv1d(xbc, lp["conv_w"], lp["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dtype)
+    xs, b, c = jnp.split(xc, [di, di + gn], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    bg = b.reshape(B, S, cfg.ssm_n_groups, cfg.ssm_state)
+    cg = c.reshape(B, S, cfg.ssm_n_groups, cfg.ssm_state)
+    y, ssm_state_new = ops.ssd(xh, dt, lp["a_log"], bg, cg, lp["d_skip"],
+                               h0=ssm_state, chunk=cfg.ssm_chunk)
+    y = y.reshape(B, S, di)
+    y = _gated_norm(y, z, lp["gnorm"], cfg.norm_eps)
+    return y @ lp["out_proj"].astype(dtype), conv_state_new, ssm_state_new
+
+
+def _mixer_step(cfg: ModelConfig, lp: dict, x: jax.Array, conv_state, ssm_state):
+    """Single-token mixer. x (B,D); states carried."""
+    B, D = x.shape
+    di, gn, conv_dim, H = _dims(cfg)
+    dtype = x.dtype
+    proj = x @ lp["in_proj"].astype(dtype)
+    z, xbc, dt_raw = jnp.split(proj, [di, di + conv_dim], axis=-1)
+    xc, conv_state = ops.conv1d_decode_step(xbc, lp["conv_w"], lp["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dtype)
+    xs, b, c = jnp.split(xc, [di, di + gn], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(B, H, cfg.ssm_head_dim)
+    bg = b.reshape(B, cfg.ssm_n_groups, cfg.ssm_state)
+    cg = c.reshape(B, cfg.ssm_n_groups, cfg.ssm_state)
+    y, ssm_state = ops.ssd_decode_step(xh, dt, lp["a_log"], bg, cg, lp["d_skip"],
+                                       ssm_state)
+    y = y.reshape(B, di)
+    y = _gated_norm(y[:, None, :], z[:, None, :], lp["gnorm"], cfg.norm_eps)[:, 0]
+    return y @ lp["out_proj"].astype(dtype), conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            remat: str = "none"):
+    x = embed_tokens(cfg, params, tokens)
+
+    def body(x, lp):
+        h = L.apply_norm(x, lp["ln"], cfg.norm_eps)
+        y, _, _ = _mixer_seq(cfg, lp, h)
+        x = constrain(x + y, L.residual_axes(cfg))
+        return x, jnp.zeros((), jnp.float32)
+
+    layers = L.cast_tree(params["layers"], cfg.dtype) if cfg.cast_weights else params["layers"]
+    x, _ = L.scan_layers(cfg, maybe_remat(body, remat), x, layers)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, remat: str = "none"):
+    x, _ = forward(cfg, params, batch["tokens"], remat=remat)
+    loss = chunked_ce_loss(cfg, params, x, batch["labels"])
+    return loss, {"ce_loss": loss}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            pad_to: int = 0):  # state is O(1): pad_to unused
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+
+    def body(x, lp):
+        h = L.apply_norm(x, lp["ln"], cfg.norm_eps)
+        y, conv_s, ssm_s = _mixer_seq(cfg, lp, h)
+        x = constrain(x + y, ("batch", "seq", None))
+        return x, (conv_s, ssm_s)
+
+    layers = L.cast_tree(params["layers"], cfg.dtype) if cfg.cast_weights else params["layers"]
+    x, (conv_s, ssm_s) = L.scan_layers(cfg, body, x, layers)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, -1:, :])[:, 0]
+    cache = {"conv": constrain(conv_s, ("layers", "batch", None, "tp")),
+             "ssm": constrain(ssm_s, ("layers", "batch", "tp", None, None)),
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array):
+    x = embed_tokens(cfg, params, tokens[:, None])[:, 0]  # (B,D)
+
+    def body(x, xs):
+        lp, conv_s, ssm_s = xs
+        h = L.apply_norm(x, lp["ln"], cfg.norm_eps)
+        y, conv_s, ssm_s = _mixer_step(cfg, lp, h, conv_s, ssm_s)
+        return x + y, (conv_s, ssm_s)
+
+    layers = L.cast_tree(params["layers"], cfg.dtype) if cfg.cast_weights else params["layers"]
+    x, (conv_s, ssm_s) = L.scan_layers(
+        cfg, body, x, (layers, cache["conv"], cache["ssm"]),
+        length=cfg.n_layers)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, None, :])[:, 0]
+    return logits, {"conv": conv_s, "ssm": ssm_s, "pos": cache["pos"] + 1}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    del max_seq  # O(1) state
+    return ssm_cache_specs(cfg, batch)

@@ -1,0 +1,116 @@
+"""ParamSpec trees: one declaration drives init, abstract shapes, and sharding.
+
+Each module declares its parameters as a nested dict of ``ParamSpec`` leaves.
+From that single tree we derive:
+  - ``init_params``      real arrays (deterministic per-path RNG folding)
+  - ``abstract_params``  ShapeDtypeStructs (dry-run: no allocation)
+  - ``param_pspecs``     PartitionSpecs via the logical-axis rules
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import logical_to_pspec
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                    # logical axes, len == len(shape)
+    init: str = "normal"           # normal | zeros | ones | scaled(fan_in) | ssm_a | conv
+    scale: float = 0.02
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_specs(n: int, tree):
+    """Prepend a scanned 'layers' axis of size n to every spec in the tree."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, shape=(n,) + s.shape, axes=("layers",) + s.axes)
+    return jax.tree.map(f, tree, is_leaf=is_spec)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":  # mamba2 A_log: log uniform [1, 16)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "lru_lambda":  # RG-LRU Λ: so that a^c ~ uniform(0.9, 0.999)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        # a = exp(-c*softplus(L)) with c=8 -> softplus(L) = -log(u)/8
+        sp = -jnp.log(u) / 8.0
+        return jnp.log(jnp.expm1(sp)).astype(dtype)
+    if spec.init == "scaled":  # normal / sqrt(fan_in); fan_in = shape[-2]
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        return (jax.random.normal(key, spec.shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def init_params(spec_tree, key: jax.Array):
+    """Materialize a ParamSpec tree (per-path deterministic fold_in)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(spec_tree, is_leaf=is_spec)
+    leaves = []
+    for path, spec in flat:
+        sub = jax.random.fold_in(key, hash(_path_str(path)) % (2**31))
+        leaves.append(_init_leaf(spec, sub))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_params(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        spec_tree, is_leaf=is_spec)
+
+
+def param_pspecs(spec_tree, mesh, overrides=None):
+    return jax.tree.map(
+        lambda s: logical_to_pspec(s.axes, s.shape, mesh, overrides),
+        spec_tree, is_leaf=is_spec)
+
+
+def param_shardings(spec_tree, mesh, overrides=None):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_to_pspec(s.axes, s.shape, mesh,
+                                                       overrides)),
+        spec_tree, is_leaf=is_spec)
+
+
+def param_count_tree(spec_tree) -> int:
+    total = 0
+    for s in jax.tree.leaves(spec_tree, is_leaf=is_spec):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,277 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern (rec, rec, attn) scanned as "superlayers" (12 for the 9B) plus
+trailing rec layers (2 for the 9B: 38 = 12*3 + 2). Every temporal-mixing
+block is followed by its own GeGLU MLP residual block (Griffin structure).
+
+Decode state is O(1) in sequence length: RG-LRU hidden + conv history per
+recurrent block, and a ring-buffer KV cache of `local_window` per attention
+block — this is why the arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.cache import hybrid_cache_specs
+from repro.models.params import ParamSpec, stack_specs
+from repro.models.sharding import constrain
+from repro.models.transformer import chunked_ce_loss, embed_tokens, maybe_remat, unembed
+
+
+def _counts(cfg: ModelConfig) -> tuple:
+    n_super = cfg.n_layers // len(cfg.block_pattern)
+    n_trail = cfg.n_layers - n_super * len(cfg.block_pattern)
+    return n_super, n_trail
+
+
+def rec_block_specs(cfg: ModelConfig) -> dict:
+    d, lw, w = cfg.d_model, cfg.lru_width, cfg.conv_width
+    return {
+        "ln1": L.norm_specs(d),
+        "wx": ParamSpec((d, lw), ("fsdp", "tp"), init="scaled"),
+        "wy": ParamSpec((d, lw), ("fsdp", "tp"), init="scaled"),
+        "conv_w": ParamSpec((w, lw), (None, "tp"), init="normal", scale=0.1),
+        "conv_b": ParamSpec((lw,), ("tp",), init="zeros"),
+        "wr": ParamSpec((lw, lw), ("fsdp", "tp"), init="scaled"),
+        "br": ParamSpec((lw,), ("tp",), init="zeros"),
+        "wi": ParamSpec((lw, lw), ("fsdp", "tp"), init="scaled"),
+        "bi": ParamSpec((lw,), ("tp",), init="zeros"),
+        "lam": ParamSpec((lw,), ("tp",), init="lru_lambda"),
+        "wo": ParamSpec((lw, d), ("tp", "fsdp"), init="scaled"),
+        "ln2": L.norm_specs(d),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def attn_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.norm_specs(cfg.d_model),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg.d_model),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def specs(cfg: ModelConfig) -> dict:
+    n_super, n_trail = _counts(cfg)
+    super_specs = {
+        "rec1": rec_block_specs(cfg),
+        "rec2": rec_block_specs(cfg),
+        "attn": attn_block_specs(cfg),
+    }
+    out = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("tp", "fsdp"), init="normal"),
+        "final_norm": L.norm_specs(cfg.d_model),
+        "super": stack_specs(n_super, super_specs),
+    }
+    if n_trail:
+        out["trail"] = stack_specs(n_trail, rec_block_specs(cfg))
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("fsdp", "tp"),
+                                   init="scaled")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocks (sequence mode)
+# ---------------------------------------------------------------------------
+
+def rec_block_seq(cfg: ModelConfig, bp: dict, x: jax.Array, state=None):
+    dtype = x.dtype
+    h = L.apply_norm(x, bp["ln1"], cfg.norm_eps)
+    u = h @ bp["wx"].astype(dtype)
+    gate = jax.nn.gelu((h @ bp["wy"].astype(dtype)).astype(jnp.float32)).astype(dtype)
+    u = constrain(u, ("batch", "seq", "tp"))
+    conv_in = state["conv"] if state else None
+    h_in = state["h"] if state else None
+    uc, conv_state = ops.causal_conv1d(u, bp["conv_w"], bp["conv_b"], conv_in)
+    r = uc @ bp["wr"].astype(dtype) + bp["br"].astype(dtype)
+    i = uc @ bp["wi"].astype(dtype) + bp["bi"].astype(dtype)
+    hs, h_last = ops.rglru(uc, r, i, bp["lam"], h0=h_in)
+    out = (hs * gate) @ bp["wo"].astype(dtype)
+    x = x + out
+    x = x + L.mlp(L.apply_norm(x, bp["ln2"], cfg.norm_eps), bp["mlp"],
+                  cfg.mlp_variant, dtype)
+    x = constrain(x, ("batch", "seq", None))
+    return x, {"h": h_last, "conv": conv_state}
+
+
+def attn_block_seq(cfg: ModelConfig, bp: dict, x: jax.Array, positions,
+                   want_cache: bool = False):
+    dtype = x.dtype
+    h = L.apply_norm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(cfg, bp["attn"], h, positions)
+    o = L.attention(q, k, v, causal=True, window=cfg.local_window, impl=cfg.attn_impl)
+    x = x + L.output_project(cfg, bp["attn"], o)
+    x = x + L.mlp(L.apply_norm(x, bp["ln2"], cfg.norm_eps), bp["mlp"],
+                  cfg.mlp_variant, dtype)
+    x = constrain(x, ("batch", "seq", None))
+    if not want_cache:
+        return x, None
+    # ring cache: slot(p) = p % W holds the last W positions
+    B, S = x.shape[0], k.shape[1]
+    W = cfg.local_window
+    kt, vt = k.swapaxes(1, 2), v.swapaxes(1, 2)           # (B,Hkv,S,Dh)
+    start = max(0, S - W)
+    slots = np.arange(start, S) % W
+    ck = jnp.zeros((B, cfg.n_kv_heads, W, cfg.head_dim), dtype)
+    cv = jnp.zeros_like(ck)
+    ck = ck.at[:, :, slots].set(kt[:, :, start:S])
+    cv = cv.at[:, :, slots].set(vt[:, :, start:S])
+    return x, (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (single-token decode mode)
+# ---------------------------------------------------------------------------
+
+def rec_block_step(cfg: ModelConfig, bp: dict, x: jax.Array, state: dict):
+    dtype = x.dtype
+    h = L.apply_norm(x[:, None, :], bp["ln1"], cfg.norm_eps)[:, 0]
+    u = h @ bp["wx"].astype(dtype)
+    gate = jax.nn.gelu((h @ bp["wy"].astype(dtype)).astype(jnp.float32)).astype(dtype)
+    uc, conv_state = ops.conv1d_decode_step(u, bp["conv_w"], bp["conv_b"], state["conv"])
+    r = uc @ bp["wr"].astype(dtype) + bp["br"].astype(dtype)
+    i = uc @ bp["wi"].astype(dtype) + bp["bi"].astype(dtype)
+    hs, h_new = ops.rglru_decode_step(uc, r, i, bp["lam"], state["h"])
+    x = x + (hs * gate) @ bp["wo"].astype(dtype)
+    x = x + L.mlp(L.apply_norm(x[:, None, :], bp["ln2"], cfg.norm_eps), bp["mlp"],
+                  cfg.mlp_variant, dtype)[:, 0]
+    return x, {"h": h_new, "conv": conv_state}
+
+
+def attn_block_step(cfg: ModelConfig, bp: dict, x: jax.Array, ck, cv, pos):
+    dtype = x.dtype
+    W = cfg.local_window
+    h = L.apply_norm(x[:, None, :], bp["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(cfg, bp["attn"], h, jnp.reshape(pos, (1,)))
+    slot = pos % W
+    ck = jax.lax.dynamic_update_slice(ck, k.swapaxes(1, 2).astype(ck.dtype),
+                                      (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.swapaxes(1, 2).astype(cv.dtype),
+                                      (0, 0, slot, 0))
+    # absolute position held by each ring slot (unwritten slots -> future)
+    s = jnp.arange(W)
+    kv_pos = pos - ((pos - s) % W)
+    kv_pos = jnp.where(kv_pos >= 0, kv_pos, pos + 1)
+    o = L.attention(q, ck.swapaxes(1, 2), cv.swapaxes(1, 2), causal=True,
+                    q_offset=pos, kv_positions=kv_pos)
+    x = x + L.output_project(cfg, bp["attn"], o)[:, 0]
+    x = x + L.mlp(L.apply_norm(x[:, None, :], bp["ln2"], cfg.norm_eps), bp["mlp"],
+                  cfg.mlp_variant, dtype)[:, 0]
+    return x, (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, remat: str = "none"):
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(S)
+
+    def super_body(x, lp):
+        x, _ = rec_block_seq(cfg, lp["rec1"], x)
+        x, _ = rec_block_seq(cfg, lp["rec2"], x)
+        x, _ = attn_block_seq(cfg, lp["attn"], x, positions)
+        x = constrain(x, L.residual_axes(cfg))
+        return x, jnp.zeros((), jnp.float32)
+
+    def trail_body(x, lp):
+        x, _ = rec_block_seq(cfg, lp, x)
+        x = constrain(x, L.residual_axes(cfg))
+        return x, jnp.zeros((), jnp.float32)
+
+    sup = L.cast_tree(params["super"], cfg.dtype) if cfg.cast_weights else params["super"]
+    x, _ = L.scan_layers(cfg, maybe_remat(super_body, remat), x, sup)
+    if "trail" in params:
+        tr = L.cast_tree(params["trail"], cfg.dtype) if cfg.cast_weights else params["trail"]
+        x, _ = L.scan_layers(cfg, maybe_remat(trail_body, remat), x, tr)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, remat: str = "none"):
+    x, _ = forward(cfg, params, batch["tokens"], remat=remat)
+    loss = chunked_ce_loss(cfg, params, x, batch["labels"])
+    return loss, {"ce_loss": loss}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            pad_to: int = 0):  # state is O(1): pad_to unused
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(S)
+
+    def super_body(x, lp):
+        x, s1 = rec_block_seq(cfg, lp["rec1"], x)
+        x, s2 = rec_block_seq(cfg, lp["rec2"], x)
+        x, kv = attn_block_seq(cfg, lp["attn"], x, positions, want_cache=True)
+        return x, (s1, s2, kv)
+
+    def trail_body(x, lp):
+        x, s = rec_block_seq(cfg, lp, x)
+        return x, s
+
+    sup = L.cast_tree(params["super"], cfg.dtype) if cfg.cast_weights else params["super"]
+    x, (s1, s2, (ck, cv)) = L.scan_layers(cfg, super_body, x, sup)
+    cache = {"super": {"rec1": s1, "rec2": s2,
+                       "k": constrain(ck, ("layers", "batch", None, "kv_seq", None)),
+                       "v": constrain(cv, ("layers", "batch", None, "kv_seq", None))},
+             "pos": jnp.asarray(S, jnp.int32)}
+    if "trail" in params:
+        tr = L.cast_tree(params["trail"], cfg.dtype) if cfg.cast_weights else params["trail"]
+        x, st = L.scan_layers(cfg, trail_body, x, tr)
+        cache["trail"] = st
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array):
+    pos = cache["pos"]
+    x = embed_tokens(cfg, params, tokens[:, None])[:, 0]
+
+    def super_body(x, xs):
+        lp, s1, s2, ck, cv = xs
+        x, s1 = rec_block_step(cfg, lp["rec1"], x, s1)
+        x, s2 = rec_block_step(cfg, lp["rec2"], x, s2)
+        x, (ck, cv) = attn_block_step(cfg, lp["attn"], x, ck, cv, pos)
+        return x, (s1, s2, ck, cv)
+
+    def trail_body(x, xs):
+        lp, s = xs
+        x, s = rec_block_step(cfg, lp, x, s)
+        return x, s
+
+    sc = cache["super"]
+    n_super, _ = _counts(cfg)
+    sup = L.cast_tree(params["super"], cfg.dtype) if cfg.cast_weights else params["super"]
+    x, (s1, s2, ck, cv) = L.scan_layers(
+        cfg, super_body, x,
+        (sup, sc["rec1"], sc["rec2"], sc["k"], sc["v"]),
+        length=n_super)
+    out_cache = {"super": {"rec1": s1, "rec2": s2, "k": ck, "v": cv},
+                 "pos": pos + 1}
+    if "trail" in params:
+        tr2 = L.cast_tree(params["trail"], cfg.dtype) if cfg.cast_weights else params["trail"]
+        x, st = L.scan_layers(cfg, trail_body, x,
+                              (tr2, cache["trail"]),
+                              length=_counts(cfg)[1])
+        out_cache["trail"] = st
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, None, :])[:, 0]
+    return logits, out_cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    del max_seq  # O(1)-in-seq state (window-bounded KV)
+    return hybrid_cache_specs(cfg, batch)

@@ -1,0 +1,120 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility-aware lowering.
+
+Tensors are annotated with *logical* axes; ``logical_to_pspec`` maps them onto
+the physical mesh, silently dropping any mesh axis that does not evenly divide
+the corresponding dimension (jit in/out shardings require divisibility). This
+keeps one rule table valid across all 10 archs × 4 shapes × 2 meshes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of mesh axes (in order of preference)
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),   # data parallel (pod is pure-DP outer axis)
+    "fsdp": ("data",),          # weight d_model dim: fully-sharded data parallel
+    "tp": ("model",),           # tensor parallel: heads/ff/vocab/experts
+    "expert": ("model",),       # expert parallel (MoE)
+    "kv_seq": ("model",),       # decode KV-cache sequence dim (flash-decoding)
+    "seq": (),                  # sequence: unsharded
+    "sp": ("model",),           # Megatron-style sequence parallelism (residual
+                                # stream between layers; gathered at attn/mlp)
+    "layers": (),               # scan axis: never sharded
+    None: (),
+}
+
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def rules_ctx(overrides: Optional[dict]):
+    """Remap logical axes for everything traced inside (constrain() included).
+
+    The hillclimbing lever: e.g. {"tp": (), "fsdp": (), "batch":
+    ("pod","data","model")} re-lowers a model pure-DP without touching
+    model code.
+    """
+    prev = getattr(_TLS, "overrides", None)
+    _TLS.overrides = dict(overrides) if overrides else None
+    try:
+        yield
+    finally:
+        _TLS.overrides = prev
+
+
+def _ctx_overrides() -> Optional[dict]:
+    return getattr(_TLS, "overrides", None)
+
+
+def _mesh_axes_present(mesh: Mesh, axes: Sequence[str]) -> tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def logical_to_pspec(logical: Sequence[Optional[str]], shape: Sequence[int],
+                     mesh: Mesh, overrides: Optional[dict] = None) -> P:
+    """Map logical axes to a PartitionSpec valid for ``shape`` on ``mesh``."""
+    rules = dict(RULES)
+    ctx = _ctx_overrides()
+    if ctx:
+        rules.update(ctx)
+    if overrides:
+        rules.update(overrides)
+    assert len(logical) == len(shape), (logical, shape)
+    used: set[str] = set()
+    spec: list = []
+    for name, dim in zip(logical, shape):
+        axes = _mesh_axes_present(mesh, rules.get(name, ()))
+        axes = tuple(a for a in axes if a not in used)
+        # drop trailing mesh axes until the shard product divides the dim
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if prod and dim % prod == 0 and dim > 0:
+                break
+            axes = axes[:-1]
+        if axes:
+            used.update(axes)
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def named_sharding(logical: Sequence[Optional[str]], shape: Sequence[int],
+                   mesh: Mesh, overrides: Optional[dict] = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_pspec(logical, shape, mesh, overrides))
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]],
+              mesh: Optional[Mesh] = None) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a mesh context."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = logical_to_pspec(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src.mesh import thread_resources
+        env_mesh = thread_resources.env.physical_mesh
+        return None if env_mesh.empty else env_mesh
+    except Exception:
+        return None
+
+
+def tree_pspecs(axes_tree, shape_tree, mesh: Mesh):
+    """Map a tree of logical-axes tuples + matching shapes -> PartitionSpecs."""
+    return jax.tree.map(
+        lambda ax, sh: logical_to_pspec(ax, sh, mesh),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )

@@ -1,0 +1,234 @@
+"""Decoder-only transformer (dense + MoE families): train / prefill / decode.
+
+Layers run under ``lax.scan`` over stacked parameters (small HLO, fast
+compiles, natural remat boundary). The cross-entropy loss is sequence-chunked
+with rematerialization so (B, S, vocab) logits are never resident at once —
+required for the 200k/256k-vocab archs at train_4k scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MOE
+from repro.models import layers as L
+from repro.models import moe as MOE_MOD
+from repro.models.cache import kv_cache_specs
+from repro.models.params import ParamSpec, stack_specs
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg: ModelConfig) -> dict:
+    out = {
+        "ln1": L.norm_specs(cfg.d_model, cfg.norm_kind),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg.d_model, cfg.norm_kind),
+    }
+    if cfg.family == MOE:
+        out["moe"] = MOE_MOD.moe_specs(cfg)
+    else:
+        out["mlp"] = L.mlp_specs(cfg)
+    return out
+
+
+def specs(cfg: ModelConfig) -> dict:
+    out = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("tp", "fsdp"),
+                           init="normal"),
+        "final_norm": L.norm_specs(cfg.d_model, cfg.norm_kind),
+        "layers": stack_specs(cfg.n_layers, layer_specs(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                   ("fsdp", "tp"), init="scaled")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    return constrain(x, ("batch", "seq", None))
+
+
+def unembed(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.tie_embeddings:
+        logits = x.astype(dtype) @ params["embed"].astype(dtype).T
+    else:
+        logits = x.astype(dtype) @ params["unembed"].astype(dtype)
+    return constrain(logits, ("batch", "seq", "tp"))
+
+
+def ffn(cfg: ModelConfig, lp: dict, h: jax.Array, group_axis: str = "seq"):
+    if cfg.family == MOE:
+        return MOE_MOD.moe_apply(cfg, lp["moe"], h, group_axis=group_axis)
+    return L.mlp(h, lp["mlp"], cfg.mlp_variant, jnp.dtype(cfg.dtype)), {}
+
+
+def _layer_body(cfg: ModelConfig, x, lp, positions, attn_fn, group_axis="seq"):
+    h = L.apply_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(cfg, lp["attn"], h, positions)
+    o, kv_out = attn_fn(q, k, v)
+    x = x + L.output_project(cfg, lp["attn"], o)
+    h = L.apply_norm(x, lp["ln2"], cfg.norm_eps)
+    y, aux = ffn(cfg, lp, h, group_axis)
+    x = x + y
+    x = constrain(x, ("batch", "seq", None))
+    return x, kv_out, aux
+
+
+def maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+# ---------------------------------------------------------------------------
+# Train forward + chunked CE loss
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            remat: str = "none") -> jax.Array:
+    """tokens (B,S) -> final hidden states (B,S,D) (pre-unembed)."""
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        def attn_fn(q, k, v):
+            return L.attention(q, k, v, causal=True, impl=cfg.attn_impl), None
+        x, _, aux = _layer_body(cfg, x, lp, positions, attn_fn)
+        x = constrain(x, L.residual_axes(cfg))
+        return x, aux.get("lb_loss", jnp.zeros((), jnp.float32))
+
+    layers = L.cast_tree(params["layers"], cfg.dtype) if cfg.cast_weights else params["layers"]
+    x, lb = L.scan_layers(cfg, maybe_remat(body, remat), x, layers)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, lb.sum()
+
+
+def chunked_ce_loss(cfg: ModelConfig, params: dict, x: jax.Array,
+                    labels: jax.Array, block: int = 512) -> jax.Array:
+    """Cross-entropy without materializing (B,S,V): scan + remat over S blocks."""
+    B, S, D = x.shape
+    block = min(block, S)
+    if S % block:
+        pad = block - S % block
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S = S + pad
+    nb = S // block
+    xb = x.reshape(B, nb, block, D).swapaxes(0, 1)        # (nb,B,block,D)
+    lb = labels.reshape(B, nb, block).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def blk(carry, inp):
+        xs, ls = inp
+        logits = unembed(cfg, params, xs).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[..., None], axis=-1)[..., 0]
+        valid = (ls >= 0).astype(jnp.float32)
+        nll_sum, n = carry
+        return (nll_sum + ((lse - ll) * valid).sum(), n + valid.sum()), None
+
+    (nll, n), _ = jax.lax.scan(blk, (jnp.zeros(()), jnp.zeros(())), (xb, lb),
+                               unroll=nb if cfg.scan_unroll else 1)
+    return nll / jnp.maximum(n, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            remat: str = "none") -> tuple:
+    x, lb_loss = forward(cfg, params, batch["tokens"], remat=remat)
+    loss = chunked_ce_loss(cfg, params, x, batch["labels"])
+    aux_coef = 0.01 if cfg.family == MOE else 0.0
+    total = loss + aux_coef * lb_loss
+    return total, {"ce_loss": loss, "lb_loss": lb_loss}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            pad_to: int = 0) -> tuple:
+    """Process full prompts; return (last-position logits (B,V), cache).
+
+    ``pad_to``: total cache capacity (>= S) so subsequent decode steps have
+    slots to write — decode at a full cache would clamp the update index.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        def attn_fn(q, k, v):
+            o = L.attention(q, k, v, causal=True, impl=cfg.attn_impl)
+            # cache layout (B, Hkv, S, Dh)
+            return o, (k.swapaxes(1, 2), v.swapaxes(1, 2))
+        x, kv, _ = _layer_body(cfg, x, lp, positions, attn_fn)
+        return x, kv
+
+    layers = L.cast_tree(params["layers"], cfg.dtype) if cfg.cast_weights else params["layers"]
+    x, (ck, cv) = L.scan_layers(cfg, body, x, layers)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, -1:, :])[:, 0]
+    if pad_to > S:
+        pad = ((0, 0), (0, 0), (0, 0), (0, pad_to - S), (0, 0))
+        ck, cv = jnp.pad(ck, pad), jnp.pad(cv, pad)
+    cache = {"k": constrain(ck, ("layers", "batch", None, "kv_seq", None)),
+             "v": constrain(cv, ("layers", "batch", None, "kv_seq", None)),
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array) -> tuple:
+    """One decode step. tokens (B,) int32; returns (logits (B,V), new cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = embed_tokens(cfg, params, tokens[:, None])
+    positions = jnp.reshape(pos, (1,))
+
+    def body(x, xs):
+        lp, ck, cv = xs
+
+        def attn_fn(q, k, v):
+            k_t = k.swapaxes(1, 2)                        # (B,Hkv,1,Dh)
+            v_t = v.swapaxes(1, 2)
+            ck2 = jax.lax.dynamic_update_slice(ck, k_t.astype(ck.dtype), (0, 0, pos, 0))
+            cv2 = jax.lax.dynamic_update_slice(cv, v_t.astype(cv.dtype), (0, 0, pos, 0))
+            o = L.attention(q, ck2.swapaxes(1, 2), cv2.swapaxes(1, 2),
+                            causal=True, q_offset=pos, kv_len=pos + 1)
+            return o, (ck2, cv2)
+
+        x, kv, _ = _layer_body(cfg, x, lp, positions, attn_fn, group_axis="batch")
+        return x, kv
+
+    layers = L.cast_tree(params["layers"], cfg.dtype) if cfg.cast_weights else params["layers"]
+    x, (ck, cv) = L.scan_layers(cfg, body, x,
+                                (layers, cache["k"], cache["v"]),
+                                length=cfg.n_layers)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)[:, 0]
+    return logits, {"k": ck, "v": cv, "pos": pos + 1}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return kv_cache_specs(cfg, batch, max_seq)

@@ -1,0 +1,6 @@
+"""Power models + telemetry (the Power Containers substrate)."""
+from repro.power.model import LinearPowerModel, calibrate_linear
+from repro.power.telemetry import StepTelemetry, mfu_utilization
+
+__all__ = ["LinearPowerModel", "calibrate_linear", "StepTelemetry",
+           "mfu_utilization"]

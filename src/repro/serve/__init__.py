@@ -1,0 +1,5 @@
+"""Serving stack: prefill/decode engine + carbon-aware request scheduler."""
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import CarbonAwareScheduler, Request
+
+__all__ = ["ServeEngine", "CarbonAwareScheduler", "Request"]

@@ -1,0 +1,89 @@
+"""Batched serving engine: shared prefill + synchronized decode.
+
+One jitted prefill and one jitted decode_step per (model, batch shape);
+decode batches are aligned (shared position counter), matching the cache
+layout the dry-run lowers (seq-sharded KV / O(1) SSM state). The carbon
+layer throttles the engine via `duty` (decode-rate cap) — vertical scaling
+for inference.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclass
+class ServeEngine:
+    model: Model
+    params: Optional[dict] = None
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b, n: self.model.prefill(p, b, pad_to=n),
+            static_argnums=(2,))
+        self._decode = jax.jit(lambda p, c, t: self.model.decode(p, c, t))
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0}
+
+    def load(self, key: Optional[jax.Array] = None):
+        self.params = self.model.init(key if key is not None
+                                      else jax.random.PRNGKey(0))
+        return self
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 greedy: bool = True, duty: float = 1.0,
+                 key: Optional[jax.Array] = None,
+                 eos_id: int = -1) -> dict:
+        """prompts: (B, S) int32 -> generated (B, max_new_tokens)."""
+        assert self.params is not None, "call load() first"
+        B, S = prompts.shape
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if self.model.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (B, self.model.cfg.enc_seq, self.model.cfg.d_model),
+                jnp.dtype(self.model.cfg.dtype))
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch, S + max_new_tokens)
+        logits.block_until_ready()
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += B * S
+
+        out = np.zeros((B, max_new_tokens), np.int32)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        done = np.zeros((B,), bool)
+        for i in range(max_new_tokens):
+            out[:, i] = np.asarray(tok)
+            if eos_id >= 0:
+                done |= out[:, i] == eos_id
+                if done.all():
+                    out = out[:, :i + 1]
+                    break
+            t0 = time.perf_counter()
+            logits, cache = self._decode(self.params, cache, tok)
+            if greedy:
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+            tok.block_until_ready()
+            dt = time.perf_counter() - t0
+            self.stats["decode_s"] += dt
+            self.stats["decode_tokens"] += B
+            if duty < 1.0:            # vertical scaling: decode-rate cap
+                time.sleep(dt * (1.0 / max(duty, 1e-2) - 1.0))
+        return {"tokens": out, "stats": dict(self.stats)}
+
+
+def throughput_tokens_per_s(stats: dict) -> dict:
+    return {
+        "prefill_tok_s": stats["prefill_tokens"] / max(stats["prefill_s"], 1e-9),
+        "decode_tok_s": stats["decode_tokens"] / max(stats["decode_s"], 1e-9),
+    }

@@ -1,0 +1,1 @@
+"""Training stack: optimizer, loop, checkpointing, data, compression."""

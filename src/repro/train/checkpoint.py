@@ -1,0 +1,157 @@
+"""Sharded checkpointing with reshard-on-restore (the migration substrate).
+
+Checkpoints are written as one ``.npz`` (path-keyed leaves) + a JSON
+manifest, atomically (tmp + rename). ``load`` device_puts every leaf with
+the *target* mesh's shardings — restoring onto a different mesh **is** the
+elastic reshard that implements the paper's container migration. Saves can
+run on a background thread (async checkpointing), and ``CheckpointManager``
+keeps a bounded history + a ``latest`` pointer for crash recovery.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(path: str, state: Any, *, step: int = 0, extra: Optional[dict] = None) -> dict:
+    """Write state to ``path`` (directory). Returns timing info."""
+    t0 = time.perf_counter()
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(state)
+    host = {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype.name == "bfloat16":      # np.savez cannot store bf16
+            a = a.view(np.uint16)
+        host[k] = a
+    t_gather = time.perf_counter() - t0
+    tmp = os.path.join(path, ".tmp.npz")
+    np.savez(tmp, **host)
+    os.replace(tmp, os.path.join(path, "state.npz"))
+    manifest = {
+        "step": int(step),
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in host.items()},
+        "bytes": int(sum(v.nbytes for v in host.values())),
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    t_total = time.perf_counter() - t0
+    return {"gather_s": t_gather, "write_s": t_total - t_gather,
+            "total_s": t_total, "bytes": manifest["bytes"]}
+
+
+def load(path: str, abstract_state: Any, *, shardings: Any = None) -> Any:
+    """Restore a state tree; device_put with (possibly different-mesh) shardings.
+
+    ``abstract_state`` fixes the tree structure + shapes; ``shardings`` (same
+    tree of NamedShardings, or None) is the target placement — pass the NEW
+    mesh's shardings to reshard elastically.
+    """
+    with np.load(os.path.join(path, "state.npz")) as z:
+        data = {k: z[k] for k in z.files}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_state)
+    sh_flat = None
+    if shardings is not None:
+        sh_flat = treedef.flatten_up_to(shardings)
+    leaves = []
+    for idx, (pathk, leaf) in enumerate(flat):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pathk)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != expected {leaf.shape}")
+        if (np.dtype(leaf.dtype).name == "bfloat16"
+                and arr.dtype == np.uint16):
+            arr = arr.view("bfloat16")      # stored as raw bits
+        else:
+            arr = arr.astype(leaf.dtype)
+        if sh_flat is not None and sh_flat[idx] is not None:
+            leaves.append(jax.device_put(arr, sh_flat[idx]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+class CheckpointManager:
+    """Bounded checkpoint history + async saves + latest-pointer recovery."""
+
+    def __init__(self, root: str, keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._last_info: Optional[dict] = None
+        os.makedirs(root, exist_ok=True)
+
+    def step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def all_steps(self) -> list:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.root, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+        self.wait()
+        # snapshot to host synchronously (cheap vs write), write async
+        host = jax.tree.map(np.asarray, state)
+
+        def work():
+            self._last_info = save(self.step_dir(step), host, step=step, extra=extra)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore(self, abstract_state: Any, *, step: Optional[int] = None,
+                shardings: Any = None) -> tuple:
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        state = load(self.step_dir(step), abstract_state, shardings=shardings)
+        return state, step
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.step_dir(s), ignore_errors=True)

@@ -1,0 +1,139 @@
+"""Training loop: state construction, jit'd train_step, grad accumulation.
+
+``make_train_step`` builds the pure step function that the dry-run lowers
+and the CarbonAwareTrainer drives. State = {params, opt{m,v}, step [, ef]}.
+State specs derive from the model's ParamSpec tree, so dry-run abstractions
+and shardings for the optimizer state come for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig, TrainConfig
+from repro.models.api import Model
+from repro.models.params import ParamSpec, abstract_params, init_params, is_spec, param_pspecs
+from repro.train import compression as COMP
+from repro.train import optimizer as OPT
+
+
+# ---------------------------------------------------------------------------
+# State specs / construction
+# ---------------------------------------------------------------------------
+
+def state_specs(model: Model, opt_cfg: OptimizerConfig) -> dict:
+    pspecs = model.specs()
+    f32 = lambda s: dataclasses.replace(s, dtype="float32", init="zeros")
+    out = {
+        "params": pspecs,
+        "opt": {"m": jax.tree.map(f32, pspecs, is_leaf=is_spec),
+                "v": jax.tree.map(f32, pspecs, is_leaf=is_spec)},
+        "step": ParamSpec((), (), init="zeros", dtype="int32"),
+    }
+    if opt_cfg.compression != "none":
+        out["ef"] = jax.tree.map(f32, pspecs, is_leaf=is_spec)
+    return out
+
+
+def init_state(model: Model, opt_cfg: OptimizerConfig, key: jax.Array) -> dict:
+    params = model.init(key)
+    state = {"params": params, "opt": OPT.adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if opt_cfg.compression != "none":
+        state["ef"] = COMP.ef_init(params)
+    return state
+
+
+def abstract_state(model: Model, opt_cfg: OptimizerConfig) -> dict:
+    return abstract_params(state_specs(model, opt_cfg))
+
+
+def state_pspecs(model: Model, opt_cfg: OptimizerConfig, mesh,
+                 overrides=None) -> dict:
+    return param_pspecs(state_specs(model, opt_cfg), mesh, overrides)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, cfg: TrainConfig) -> Callable:
+    opt_cfg = cfg.optimizer
+    update = OPT.UPDATES[opt_cfg.name]
+
+    def loss_of(params, batch):
+        loss, metrics = model.loss(params, batch, remat=cfg.remat)
+        return loss, metrics
+
+    def compute_grads(params, batch):
+        if cfg.microbatch and cfg.microbatch < cfg.global_batch:
+            n_micro = cfg.global_batch // cfg.microbatch
+            split = lambda x: x.reshape((n_micro, cfg.microbatch) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                carry_g, carry_l = carry
+                return (jax.tree.map(jnp.add, carry_g, g), carry_l + loss), metrics
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), metrics = jax.lax.scan(acc_fn, (zero_g, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            return (lsum / n_micro, metrics), grads
+        return jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+
+    def train_step(state: dict, batch: dict):
+        (loss, metrics), grads = compute_grads(state["params"], batch)
+        new_state = dict(state)
+        if opt_cfg.compression == "int8":
+            grads, new_state["ef"] = COMP.compress_int8(grads, state["ef"])
+        elif opt_cfg.compression == "topk":
+            grads, new_state["ef"] = COMP.compress_topk(grads, state["ef"],
+                                                        opt_cfg.topk_ratio)
+        new_p, new_opt, opt_metrics = update(
+            opt_cfg, grads, state["opt"], state["params"], state["step"])
+        new_state.update({"params": new_p, "opt": new_opt,
+                          "step": state["step"] + 1})
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Simple driver (single-process; the carbon-aware driver wraps this)
+# ---------------------------------------------------------------------------
+
+def run(model: Model, cfg: TrainConfig, data_iter, *, mesh=None,
+        state: Optional[dict] = None,
+        step_callback: Optional[Callable] = None) -> dict:
+    """Train for cfg.steps; returns final state. step_callback gets telemetry."""
+    from repro.data.pipeline import shard_batch
+
+    key = jax.random.PRNGKey(cfg.seed)
+    if state is None:
+        state = init_state(model, cfg.optimizer, key)
+    step_fn = jax.jit(make_train_step(model, cfg), donate_argnums=(0,))
+
+    history = []
+    it = iter(data_iter)
+    for i in range(cfg.steps):
+        batch = shard_batch(next(it), mesh)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.perf_counter() - t0
+        metrics["step_time_s"] = dt
+        metrics["tokens"] = cfg.global_batch * cfg.seq_len
+        history.append(metrics)
+        if step_callback is not None:
+            step_callback(i, state, metrics)
+        if cfg.log_every and i % cfg.log_every == 0:
+            print(f"step {i:5d} loss {metrics['loss']:.4f} "
+                  f"({dt*1e3:.0f} ms)", flush=True)
+    return {"state": state, "history": history}

@@ -1,0 +1,106 @@
+"""Hand-rolled AdamW + LR schedules (no optax in this environment).
+
+Optimizer state mirrors the parameter tree (same shapes/shardings), so the
+model's ParamSpec tree provides dry-run abstractions and PartitionSpecs for
+``m``/``v`` for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(step / cfg.warmup_steps, 1.0)
+    else:
+        warm = 1.0
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    elif cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * decay
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(cfg: OptimizerConfig, grads, opt_state, params, step):
+    """Returns (new_params, new_opt_state, metrics). All f32 master math."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# SGD (baseline optimizer)
+# ---------------------------------------------------------------------------
+
+def sgd_update(cfg: OptimizerConfig, grads, opt_state, params, step):
+    lr = lr_at(cfg, step)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    mom = jax.tree.map(
+        lambda m, g: 0.9 * m + g.astype(jnp.float32), opt_state["m"], grads)
+    new_p = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mom)
+    return new_p, {"m": mom, "v": opt_state["v"]}, {"grad_norm": gnorm, "lr": lr}
+
+
+UPDATES = {"adamw": adamw_update, "sgd": sgd_update}

@@ -1,0 +1,5 @@
+"""Workload-intensity traces (the Azure-trace substrate, synthesized)."""
+from repro.workload.azure_like import VMTrace, sample_population
+from repro.workload.replay import ReplayHarness
+
+__all__ = ["VMTrace", "sample_population", "ReplayHarness"]

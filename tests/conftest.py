@@ -1,0 +1,9 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real
+device count (1 CPU); only dryrun.py forces 512 host devices."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

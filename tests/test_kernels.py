@@ -1,0 +1,174 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes/dtypes, plus the custom-VJP flash gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_pallas
+from repro.kernels.ssd_scan import ssd_pallas
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _qkv(B, S, Hq, Hkv, Dh, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh), dtype)
+    return q, k, v
+
+
+ATTN_CASES = [
+    # B, S, Hq, Hkv, Dh, causal, window, bq, bk
+    (2, 128, 4, 2, 32, True, 0, 32, 32),
+    (1, 64, 2, 1, 16, True, 24, 16, 32),
+    (2, 128, 4, 4, 64, False, 0, 64, 64),
+    (1, 96, 8, 2, 32, True, 0, 32, 48),   # uneven blocks (pad path)
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_pallas_vs_ref(case, dtype):
+    B, S, Hq, Hkv, Dh, causal, window, bq, bk = case
+    q, k, v = _qkv(B, S, Hq, Hkv, Dh, dtype)
+    ref = R.attention_ref(q, k, v, causal=causal, window=window)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_kv=bk, interpret=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("case", ATTN_CASES[:3])
+def test_flash_custom_vjp_grads(case):
+    B, S, Hq, Hkv, Dh, causal, window, bq, bk = case
+    q, k, v = _qkv(B, S, Hq, Hkv, Dh, jnp.float32)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(R.attention_ref(q, k, v, causal=causal,
+                                       window=window) ** 2)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(R.attention_flash(q, k, v, causal=causal,
+                                         window=window, q_block=bq,
+                                         kv_block=bk) ** 2)
+
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-3, rtol=1e-3)
+
+
+def test_chunked_matches_ref_with_offsets():
+    q, k, v = _qkv(2, 40, 4, 2, 16, jnp.float32)
+    q1 = q[:, 30:32]
+    ref = R.attention_ref(q1, k, v, causal=True, q_offset=30, kv_len=37)
+    chk = R.attention_chunked(q1, k, v, causal=True, q_offset=30, kv_len=37,
+                              q_block=2, kv_block=16)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(ref), atol=2e-5)
+
+
+SSD_CASES = [
+    # B, S, H, P, N, chunk, bh
+    (2, 64, 4, 16, 32, 16, 2),
+    (1, 128, 8, 32, 64, 32, 4),
+    (2, 96, 4, 64, 16, 32, 4),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_pallas_vs_sequential_ref(case, dtype):
+    B, S, H, P, N, Q, bh = case
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(jnp.float32)
+    a_log = jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.5)
+    b = jax.random.normal(ks[3], (B, S, 1, N), dtype)
+    c = jax.random.normal(ks[4], (B, S, 1, N), dtype)
+    d = jnp.ones((H,))
+    y_ref, h_ref = R.ssd_ref(x, dt, a_log, b, c, d)
+    y, h = ssd_pallas(x, dt, a_log, b, c, d, chunk=Q, block_heads=bh,
+                      interpret=True)
+    tol = 5e-3 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_ssd_chunked_matches_ref_with_state():
+    B, S, H, P, N = 2, 48, 4, 8, 16
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a_log = jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.0)
+    b = jax.random.normal(ks[3], (B, S, 2, N))
+    c = jax.random.normal(ks[4], (B, S, 2, N))
+    d = jnp.zeros((H,))
+    h0 = jax.random.normal(ks[5], (B, H, P, N))
+    y_ref, h_ref = R.ssd_ref(x, dt, a_log, b, c, d, h0=h0)
+    y, h = R.ssd_chunked(x, dt, a_log, b, c, d, h0=h0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+RGLRU_CASES = [(2, 64, 128), (1, 128, 256), (3, 32, 512)]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", RGLRU_CASES)
+def test_rglru_pallas_vs_ref(case, dtype):
+    B, S, W = case
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, S, W), dtype)
+    r = jax.random.normal(ks[1], (B, S, W), dtype)
+    i = jax.random.normal(ks[2], (B, S, W), dtype)
+    lam = jax.random.normal(ks[3], (W,))
+    y_ref, h_ref = R.rglru_ref(x, r, i, lam)
+    y, h = rglru_pallas(x, r, i, lam, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    htol = 1e-4 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=htol,
+                               rtol=htol)
+
+
+def test_rglru_assoc_matches_ref_with_state():
+    B, S, W = 2, 40, 32
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, W))
+    r = jax.random.normal(ks[1], (B, S, W))
+    i = jax.random.normal(ks[2], (B, S, W))
+    lam = jax.random.normal(ks[3], (W,))
+    h0 = jax.random.normal(ks[4], (B, W))
+    y_ref, hf_ref = R.rglru_ref(x, r, i, lam, h0=h0)
+    y, hf = R.rglru_assoc(x, r, i, lam, h0=h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hf_ref), atol=1e-5)
+
+
+def test_conv1d_seq_and_step_agree():
+    B, S, C, K = 2, 16, 8, 4
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (B, S, C))
+    w = jax.random.normal(ks[1], (K, C))
+    b = jax.random.normal(ks[2], (C,))
+    from repro.kernels import ops
+    y_seq, state = R.causal_conv1d_ref(x, w, b)
+    state_i = jnp.zeros((B, K - 1, C))
+    outs = []
+    for t in range(S):
+        y_t, state_i = ops.conv1d_decode_step(x[:, t], w, b, state_i)
+        outs.append(y_t)
+    y_step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_seq), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state_i), np.asarray(state), atol=1e-6)

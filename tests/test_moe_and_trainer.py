@@ -1,0 +1,112 @@
+"""MoE shard_map-vs-local equivalence, the carbon-aware trainer loop, and
+the serve scheduler's carbon coupling."""
+import os
+
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+
+def test_moe_mesh_equals_local_when_no_drops():
+    """With generous capacity both paths route identically -> same output."""
+    from repro.configs import get_arch
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_arch("olmoe-1b-7b").smoke,
+                              capacity_factor=8.0)
+    m = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B, S = 4, 16
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    loss_local, _ = jax.jit(lambda p, b: m.loss(p, b))(params, batch)
+
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("needs >=2 devices for a mesh path")
+    mesh = jax.make_mesh((1, min(n, cfg.n_experts)), ("data", "model"))
+    sharded = jax.tree.map(jax.device_put, params, m.shardings(mesh))
+    with mesh:
+        loss_mesh, _ = jax.jit(lambda p, b: m.loss(p, b))(sharded, batch)
+    np.testing.assert_allclose(float(loss_local), float(loss_mesh),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_router_load_balance_loss_bounds():
+    from repro.configs import get_arch
+    from repro.models import get_model
+
+    cfg = get_arch("dbrx-132b").smoke
+    m = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = m.init(key)
+    batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (4, 32), 0, cfg.vocab_size)}
+    _, metrics = jax.jit(lambda p, b: m.loss(p, b))(params, batch)
+    lb = float(metrics["lb_loss"])
+    # Switch-style lb loss is ~n_layers at uniform routing, >= per layer 1.0
+    assert cfg.n_layers * 0.5 < lb < cfg.n_layers * 4.0
+
+
+def test_carbon_aware_trainer_enforces_and_migrates():
+    """Run the live trainer with a virtual clock; the enforced carbon rate
+    must respect the target and at least one enforcement action must fire."""
+    from repro.carbon.intensity import TraceProvider
+    from repro.cluster.slices import Slice, SliceFamily
+    from repro.config import CarbonConfig, OptimizerConfig, TrainConfig
+    from repro.configs import get_arch
+    from repro.core.carbon_aware_trainer import CarbonAwareTrainer
+    from repro.core.elastic import ElasticJob
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import get_model
+    from repro.power.model import LinearPowerModel
+
+    cfg = get_arch("smollm-135m").smoke
+    model = get_model(cfg)
+    tcfg = TrainConfig(seq_len=16, global_batch=4,
+                       optimizer=OptimizerConfig(warmup_steps=1, total_steps=100))
+    devs = jax.devices()
+    slices = [Slice("s1", 0.5, LinearPowerModel(30.0, 80.0), chips=1),
+              Slice("s2", 1.0, LinearPowerModel(60.0, 160.0), chips=1)]
+    fam = SliceFamily(slices, baseline_idx=1)
+    with tempfile.TemporaryDirectory() as d:
+        job = ElasticJob(model, tcfg, d)
+        job.start(devs[:1])
+        step_flops = 6.0 * model.param_count() * 16 * 4
+        trainer = CarbonAwareTrainer(
+            job=job, family=fam, slice_devices=[devs[:1], devs[:1]],
+            carbon=TraceProvider([400.0] * 48),
+            cfg=CarbonConfig(target_rate=40.0, interval_s=300.0),
+            step_flops=step_flops, step_tokens=64,
+            peak_flops_per_chip=step_flops / 120.0,
+            sim_seconds_per_step=150.0)
+        out = trainer.run(iter(SyntheticLM(cfg.vocab_size, 16, 4)), 30)
+    assert out["steps"] == 30
+    rates = [l.carbon_rate for l in out["logs"]]
+    # enforced: the average rate respects the target (first interval may peak)
+    assert sum(rates) / len(rates) <= 40.0 * 1.1
+    assert any(l.action in ("migrate", "stay") and l.duty < 1.0
+               for l in out["logs"]) or any(
+        l.slice_name == "s1" for l in out["logs"])
+
+
+def test_replay_harness_tracks_target():
+    from repro.workload.replay import ReplayHarness
+
+    h = ReplayHarness()
+    res = h.replay([0.4] * 24, lambda u: u + np.random.default_rng(0).normal(0, 0.01))
+    assert res["ma_max_err"] < 0.01   # paper Fig 9: within 1% on the MA
+
+
+def test_elastic_mesh_over_shapes():
+    from repro.core.elastic import mesh_over
+
+    devs = jax.devices()
+    m = mesh_over(devs[:1])
+    assert dict(m.shape) == {"data": 1, "model": 1}
