@@ -1,0 +1,19 @@
+PY := python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test-fast test bench-fleet bench
+
+# Fast lane: carbon-core + fleet tests (seconds, no JAX model compiles)
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+# Full tier-1 suite (multi-minute: JAX kernels, archs, training)
+test:
+	$(PY) -m pytest -x -q
+
+# Fleet-vs-scalar sweep speedup entry (the perf trajectory record)
+bench-fleet:
+	$(PY) -m benchmarks.run --only fleet_sweep --fast true
+
+bench:
+	$(PY) -m benchmarks.run

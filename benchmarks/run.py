@@ -47,6 +47,9 @@ def main() -> None:
         ("fig13_14_medvar", figs.fig13_14_medvar, {"n_jobs": n_small}),
         ("fig15_16_variants", figs.fig15_16_variants, {"n_jobs": max(n_small // 2, 6)}),
         ("fig17_server_time", figs.fig17_server_time, {"n_jobs": max(n_small // 2, 6)}),
+        # vectorized fleet simulator vs looped simulate() (64x4x3 sweep);
+        # fast mode shortens the traces, not the sweep shape
+        ("fleet_sweep", figs.fleet_sweep, {"days": 2 if fast else 3}),
     ]
     only = args.get("only")
 

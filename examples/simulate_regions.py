@@ -1,7 +1,10 @@
 """Large-scale Carbon Containers simulation across regions (paper Figs 11-16
-in miniature): 1000-VM-style population, all four policies, three regions.
+in miniature): per-region policy tables plus a heterogeneous fleet — mixed
+regions (stacked carbon traces), mixed targets, mixed demand scales — run
+through the vectorized FleetSimulator.
 
-    PYTHONPATH=src python examples/simulate_regions.py [--jobs 20]
+    PYTHONPATH=src python examples/simulate_regions.py \
+        [--jobs 20] [--backend fleet|scalar] [--fleet 120]
 """
 import sys
 
@@ -9,18 +12,26 @@ import numpy as np
 
 from repro.carbon.intensity import TraceProvider
 from repro.cluster.slices import paper_family
+from repro.core.fleet import FleetSimulator
 from repro.core.policy import (CarbonAgnosticPolicy, CarbonContainerPolicy,
                                SuspendResumePolicy, VScaleOnlyPolicy)
 from repro.core.simulator import SimConfig, simulate
 from repro.workload.azure_like import sample_population
 
+DAYS = 5
+INTERVAL_S = 300.0
 
-def main():
-    n_jobs = 20
-    if "--jobs" in sys.argv:
-        n_jobs = int(sys.argv[sys.argv.index("--jobs") + 1])
+
+def _arg(flag, default, cast):
+    if flag in sys.argv:
+        return cast(sys.argv[sys.argv.index(flag) + 1])
+    return default
+
+
+def per_region_tables(n_jobs: int, backend: str):
+    """The original per-region policy comparison, now fleet-backed."""
     fam = paper_family()
-    traces = [t.util for t in sample_population(n_jobs, days=5, seed=2)]
+    traces = [t.util for t in sample_population(n_jobs, days=DAYS, seed=2)]
     policies = [
         ("carbon-agnostic", CarbonAgnosticPolicy),
         ("suspend/resume", SuspendResumePolicy),
@@ -29,24 +40,96 @@ def main():
         ("CC (performance)", lambda: CarbonContainerPolicy("performance")),
     ]
     target = 45.0
-    print(f"{n_jobs} jobs x 5 days, C_target = {target} g/hr\n")
+    print(f"{n_jobs} jobs x {DAYS} days, C_target = {target} g/hr "
+          f"[backend={backend}]\n")
     for region in ("PL", "NL", "CAISO"):
-        carbon = TraceProvider.for_region(region, hours=24 * 5, seed=1)
+        carbon = TraceProvider.for_region(region, hours=24 * DAYS, seed=1)
         print(f"--- region {region} ---")
         print(f"  {'policy':18s} {'g/hr':>8s} {'throttle%':>10s} "
               f"{'migs':>6s} {'susp%':>6s}")
         for name, mk in policies:
-            rates, thr, migs, susp = [], [], [], []
-            for tr in traces:
-                r = simulate(mk(), fam, tr, carbon,
-                             SimConfig(target_rate=target, state_gb=1.0))
-                rates.append(r.avg_carbon_rate)
-                thr.append(r.avg_throttle_pct)
-                migs.append(r.migrations)
-                susp.append(r.suspended_frac)
+            if backend == "fleet":
+                sim = FleetSimulator(fam, interval_s=INTERVAL_S)
+                res = sim.run(mk(), np.stack(traces, axis=1), carbon, target,
+                              state_gb=1.0)
+                rates = res.avg_carbon_rate
+                thr = res.avg_throttle_pct
+                migs = res.migrations
+                susp = res.suspended_frac
+            else:
+                rates, thr, migs, susp = [], [], [], []
+                for tr in traces:
+                    r = simulate(mk(), fam, tr, carbon,
+                                 SimConfig(target_rate=target, state_gb=1.0))
+                    rates.append(r.avg_carbon_rate)
+                    thr.append(r.avg_throttle_pct)
+                    migs.append(r.migrations)
+                    susp.append(r.suspended_frac)
             print(f"  {name:18s} {np.mean(rates):8.2f} {np.mean(thr):10.2f} "
-                  f"{np.mean(migs):6.1f} {100*np.mean(susp):6.1f}")
+                  f"{np.mean(migs):6.1f} {100 * np.mean(susp):6.1f}")
         print()
+
+
+def heterogeneous_fleet(n: int):
+    """One batched run over a mixed fleet: container i gets a region, a
+    carbon target and a demand scale of its own — the multi-tenant
+    (Ecovisor-style energy partitioning / CarbonScaler elasticity) shape,
+    expressed as stacked carbon traces + per-container target vectors."""
+    rng = np.random.default_rng(7)
+    fam = paper_family()
+    regions = ("PL", "NL", "CAISO")
+    provs = {r: TraceProvider.for_region(r, hours=24 * DAYS, seed=1)
+             for r in regions}
+    traces = [t.util for t in sample_population(n, days=DAYS, seed=3)]
+    T = len(traces[0])
+    tvec = np.arange(T) * INTERVAL_S
+
+    assign = rng.integers(0, len(regions), size=n)
+    cmat = np.stack([provs[regions[a]].intensity_series(tvec)
+                     for a in assign], axis=1)
+    targets = rng.choice([20.0, 35.0, 50.0, 80.0], size=n)
+    demand_scale = rng.choice([0.5, 1.0, 2.0, 4.0], size=n)
+    state_gb = rng.choice([0.25, 1.0, 4.0], size=n)
+
+    sim = FleetSimulator(fam, interval_s=INTERVAL_S)
+    res = sim.run(CarbonContainerPolicy("energy"), np.stack(traces, axis=1),
+                  cmat, targets, state_gb=state_gb,
+                  demand_scale=demand_scale)
+
+    print(f"--- heterogeneous fleet: {n} containers, mixed "
+          f"{'/'.join(regions)}, mixed targets/scales ---")
+    print(f"  {'group':22s} {'n':>4s} {'g/hr':>8s} {'target':>7s} "
+          f"{'throttle%':>10s} {'susp%':>6s}")
+    for ri, region in enumerate(regions):
+        m = assign == ri
+        if not m.any():
+            continue
+        print(f"  region {region:15s} {int(m.sum()):4d} "
+              f"{res.avg_carbon_rate[m].mean():8.2f} "
+              f"{targets[m].mean():7.1f} "
+              f"{res.avg_throttle_pct[m].mean():10.2f} "
+              f"{100 * res.suspended_frac[m].mean():6.1f}")
+    for tgt in np.unique(targets):
+        m = targets == tgt
+        print(f"  target {tgt:5.0f} g/hr     {int(m.sum()):4d} "
+              f"{res.avg_carbon_rate[m].mean():8.2f} "
+              f"{tgt:7.1f} "
+              f"{res.avg_throttle_pct[m].mean():10.2f} "
+              f"{100 * res.suspended_frac[m].mean():6.1f}")
+    under = (res.avg_carbon_rate <= targets * 1.02).mean()
+    print(f"\n  fleet emissions: {res.emissions_g.sum() / 1000.0:.1f} kg CO2e"
+          f" | {100 * under:.0f}% of containers within 2% of target\n")
+
+
+def main():
+    n_jobs = _arg("--jobs", 20, int)
+    backend = _arg("--backend", "fleet", str)
+    if backend not in ("fleet", "scalar"):
+        raise SystemExit(f"--backend must be 'fleet' or 'scalar', "
+                         f"got {backend!r}")
+    n_fleet = _arg("--fleet", 120, int)
+    per_region_tables(n_jobs, backend)
+    heterogeneous_fleet(n_fleet)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,10 @@ class ConstantProvider:
     def intensity(self, t_seconds: float) -> float:
         return self.value
 
+    def intensity_series(self, t_seconds: np.ndarray) -> np.ndarray:
+        """Vectorized lookup for the fleet simulator: one value per time."""
+        return np.full(np.shape(t_seconds), self.value, dtype=np.float64)
+
 
 class TraceProvider:
     """Hourly trace, piecewise constant, wraps around at the end."""
@@ -41,3 +45,9 @@ class TraceProvider:
     def intensity(self, t_seconds: float) -> float:
         idx = int((t_seconds - self.start_s) // 3600.0) % len(self.hourly)
         return float(self.hourly[idx])
+
+    def intensity_series(self, t_seconds: np.ndarray) -> np.ndarray:
+        """Vectorized lookup: same piecewise-hourly floor-div as `intensity`."""
+        t = np.asarray(t_seconds, dtype=np.float64)
+        idx = ((t - self.start_s) // 3600.0).astype(np.int64) % len(self.hourly)
+        return self.hourly[idx]

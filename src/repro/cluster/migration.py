@@ -11,6 +11,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 
 @dataclass(frozen=True)
 class MigrationCostModel:
@@ -41,6 +43,21 @@ class MigrationCostModel:
             t += (state_gb / self.compression_ratio) / bw
         else:
             t += state_gb / bw
+        return t + self.restore_extra_s
+
+    def stop_and_copy_time_batch(self, state_gb, transfer_gbps):
+        """Vectorized `stop_and_copy_time` (compressed path) over arrays.
+
+        Mirrors the scalar term order exactly — including the
+        `transfer_gbps or self.transfer_gbps` zero-bandwidth fallback — so
+        the fleet simulator stays bit-compatible with the scalar path.
+        """
+        bw = np.where(transfer_gbps == 0.0, self.transfer_gbps,
+                      transfer_gbps)
+        t = ((self.suspend_base_s + self.suspend_per_gb_s * state_gb)
+             + (self.resume_base_s + self.resume_per_gb_s * state_gb))
+        t = t + (self.compress_per_gb_s + self.decompress_per_gb_s) * state_gb
+        t = t + (state_gb / self.compression_ratio) / bw
         return t + self.restore_extra_s
 
     def live_migration_overlap_s(self, state_gb: float,

@@ -11,6 +11,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.power.model import LinearPowerModel
 
 
@@ -62,6 +64,54 @@ class SliceFamily:
 
     def smallest(self) -> int:
         return next(i for i, a in enumerate(self.available) if a)
+
+    def tables(self) -> "FamilyTables":
+        """Snapshot the family as flat arrays for the vectorized fleet path.
+
+        Power curves become per-slice (base_w, peak_w) lookup tables;
+        availability-aware neighbor scans (`next_smaller`/`next_larger`)
+        are precomputed per index (-1 = none) so the batch decision kernel
+        never walks the slice list at simulation time. The snapshot is
+        taken once — later `available` mutations do not propagate.
+        """
+        n = len(self.slices)
+        ns = np.array([(-1 if (j := self.next_smaller(i)) is None else j)
+                       for i in range(n)], dtype=np.int64)
+        nl = np.array([(-1 if (j := self.next_larger(i)) is None else j)
+                       for i in range(n)], dtype=np.int64)
+        return FamilyTables(
+            base_w=np.array([s.power.base_w for s in self.slices]),
+            peak_w=np.array([s.power.peak_w for s in self.slices]),
+            multiple=np.array([s.multiple for s in self.slices]),
+            bw_gbps=np.array([s.state_bw_gbps for s in self.slices]),
+            next_smaller=ns,
+            next_larger=nl,
+            smallest=self.smallest(),
+            baseline_idx=self.baseline_idx,
+            names=tuple(s.name for s in self.slices),
+            well_formed=bool(all(s.power.peak_w > s.power.base_w
+                                 for s in self.slices)),
+        )
+
+
+@dataclass(frozen=True)
+class FamilyTables:
+    """Flat-array view of a SliceFamily for vectorized (fleet) simulation.
+
+    All arrays are indexed by slice position (smallest -> largest); a
+    container's state indexes into them with `np.take`-style gathers.
+    """
+    base_w: np.ndarray       # (S,) idle power per slice
+    peak_w: np.ndarray       # (S,) full-utilization power
+    multiple: np.ndarray     # (S,) capacity relative to baseline
+    bw_gbps: np.ndarray      # (S,) migration-path bandwidth
+    next_smaller: np.ndarray  # (S,) index of next available smaller; -1 none
+    next_larger: np.ndarray   # (S,) index of next available larger; -1 none
+    smallest: int
+    baseline_idx: int
+    names: tuple
+    well_formed: bool = True  # every slice has peak_w > base_w (lets the
+    #                           kernels elide the degenerate-curve fixups)
 
 
 def paper_family() -> SliceFamily:

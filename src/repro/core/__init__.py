@@ -5,15 +5,19 @@
                    vertical-scaling-only)
 - container.py     the lxcc-like container object + plant model
 - simulator.py     trace-driven large-scale evaluation (Figs 10-17)
+- fleet.py         vectorized fleet simulator (N containers per sweep)
 - carbon_aware_trainer.py  live enforcement on a JAX training job
 - elastic.py       checkpoint -> reshard -> restore slice migration
 """
 from repro.core.container import CarbonContainer, ContainerState, PlantModel
 from repro.core.policy import (CarbonAgnosticPolicy, CarbonContainerPolicy,
                                SuspendResumePolicy, VScaleOnlyPolicy)
-from repro.core.simulator import SimConfig, SimResult, simulate
+from repro.core.simulator import (SimConfig, SimResult, simulate,
+                                  sweep_population)
+from repro.core.fleet import FleetResult, FleetSimulator
 
 __all__ = ["CarbonContainer", "ContainerState", "PlantModel",
            "CarbonContainerPolicy", "CarbonAgnosticPolicy",
            "SuspendResumePolicy", "VScaleOnlyPolicy",
-           "SimConfig", "SimResult", "simulate"]
+           "SimConfig", "SimResult", "simulate", "sweep_population",
+           "FleetSimulator", "FleetResult"]

@@ -1,0 +1,607 @@
+"""Vectorized fleet simulator: N Carbon Containers advanced in lockstep.
+
+The scalar `repro.core.simulator.simulate` runs one pure-Python loop per
+container, which makes population sweeps (paper Figs 11-16) and
+CarbonScaler/Ecovisor-style fleet studies prohibitively slow. This module
+advances a whole fleet per monitoring interval using NumPy array state.
+
+Array-state layout
+------------------
+`FleetState` holds one `(N,)` array per scalar `ContainerState` field:
+
+    slice_idx      int64   current slice (index into the FamilyTables)
+    duty           f64     duty-cycle quota set by the last decision
+    suspended      bool    container released / idle-parked
+    migrating_s    f64     remaining stop-and-copy downtime (0 = none)
+    migrate_target int64   destination slice while migrating (-1 = none)
+    dwell          int64   intervals since the last migration
+    emissions_g, energy_wh, work_done, throttled_integral,
+    demand_integral, suspended_s, elapsed_s           f64 accumulators
+    migrations     int64
+    time_on_slice_s  (N, S+1) f64; column S counts suspended time
+    recent_peak    f64     rolling W-interval demand peak (precomputed as a
+                           (T, N) sliding-window-max matrix before the loop)
+
+Decision-kernel masking scheme
+------------------------------
+Each policy exposes `decide_batch(tables, state, demand, c, target, eps)`
+returning `(kind, duty, target_slice)` arrays; branchy scalar `decide`
+logic becomes boolean masks applied in scalar-return order (a `decided`
+mask freezes containers that already matched an earlier return site, so
+mask priority == scalar control flow). The step function then partitions
+the fleet into {migrating, suspend, resume, migrate, stay} masks, computes
+power/served per partition with the precomputed per-slice (base_w, peak_w,
+multiple) lookup tables, and applies one fused accounting update.
+
+Every arithmetic expression mirrors the scalar path term-for-term, so an
+N=1 fleet reproduces `simulate()` bit-for-bit (see tests/test_fleet.py).
+Per-container heterogeneity is first-class: `targets`, `epsilon`,
+`state_gb` broadcast per container, `demand` is `(T, N)`, and `carbon`
+accepts a `(T, N)` matrix for mixed-region (stacked-trace) fleets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.migration import MigrationCostModel
+from repro.cluster.slices import FamilyTables, SliceFamily
+from repro.core.policy import (K_MIGRATE, K_RESUME, K_STAY, K_SUSPEND,
+                               _budget_batch)
+from repro.core.simulator import SimConfig, SimResult
+
+_PEAK_WINDOW = 6          # ContainerState.observe_demand default (n=6)
+
+
+@dataclass
+class FleetState:
+    """(N,)-array mirror of `ContainerState` (see module docstring)."""
+    slice_idx: np.ndarray
+    duty: np.ndarray
+    suspended: np.ndarray
+    migrating_s: np.ndarray
+    migrate_target: np.ndarray
+    dwell: np.ndarray
+    emissions_g: np.ndarray
+    energy_wh: np.ndarray
+    work_done: np.ndarray
+    throttled_integral: np.ndarray
+    demand_integral: np.ndarray
+    suspended_s: np.ndarray
+    elapsed_s: np.ndarray
+    migrations: np.ndarray
+    time_on_slice_s: np.ndarray
+    recent_peak: np.ndarray              # rolling-window demand peak
+
+    @classmethod
+    def init(cls, n: int, n_slices: int, baseline_idx: int) -> "FleetState":
+        z = lambda: np.zeros(n, dtype=np.float64)
+        return cls(
+            slice_idx=np.full(n, baseline_idx, dtype=np.int64),
+            duty=np.ones(n, dtype=np.float64),
+            suspended=np.zeros(n, dtype=bool),
+            migrating_s=z(),
+            migrate_target=np.full(n, -1, dtype=np.int64),
+            dwell=np.full(n, 10 ** 6, dtype=np.int64),   # as simulate() seeds
+            emissions_g=z(), energy_wh=z(), work_done=z(),
+            throttled_integral=z(), demand_integral=z(),
+            suspended_s=z(), elapsed_s=z(),
+            migrations=np.zeros(n, dtype=np.int64),
+            time_on_slice_s=np.zeros((n, n_slices + 1), dtype=np.float64),
+            recent_peak=z(),
+        )
+
+
+@dataclass
+class FleetResult:
+    """Per-container result arrays; `result(i)` extracts a scalar SimResult."""
+    emissions_g: np.ndarray
+    energy_wh: np.ndarray
+    work_done: np.ndarray
+    work_demanded: np.ndarray
+    throttled_integral: np.ndarray
+    migrations: np.ndarray
+    suspended_s: np.ndarray
+    elapsed_s: np.ndarray
+    time_on_slice_s: np.ndarray          # (N, S+1); last column = suspended
+    slice_names: tuple                   # S names + ("suspended",)
+    baseline_cap: float
+    power_series: Optional[np.ndarray] = None   # (T, N) when record=True
+    served_series: Optional[np.ndarray] = None  # (T, N) when record=True
+
+    @property
+    def n(self) -> int:
+        return self.emissions_g.shape[0]
+
+    @property
+    def hours(self) -> np.ndarray:
+        return self.elapsed_s / 3600.0
+
+    @property
+    def avg_carbon_rate(self) -> np.ndarray:
+        return self.emissions_g / np.maximum(self.hours, 1e-12)
+
+    @property
+    def avg_throttle_pct(self) -> np.ndarray:
+        return (100.0 * self.throttled_integral
+                / np.maximum(self.elapsed_s, 1e-9) / self.baseline_cap)
+
+    @property
+    def suspended_frac(self) -> np.ndarray:
+        return self.suspended_s / np.maximum(self.elapsed_s, 1e-9)
+
+    def time_on_slice(self, i: int) -> dict:
+        el = max(float(self.elapsed_s[i]), 1e-9)
+        return {name: float(s) / el
+                for name, s in zip(self.slice_names, self.time_on_slice_s[i])
+                if s > 0.0}
+
+    def result(self, i: int) -> SimResult:
+        hours = float(self.elapsed_s[i]) / 3600.0
+        el = max(float(self.elapsed_s[i]), 1e-9)
+        return SimResult(
+            avg_carbon_rate=float(self.emissions_g[i]) / max(hours, 1e-12),
+            avg_throttle_pct=100.0 * float(self.throttled_integral[i]) / el
+            / self.baseline_cap,
+            work_done=float(self.work_done[i]),
+            work_demanded=float(self.work_demanded[i]),
+            energy_kwh=float(self.energy_wh[i]) / 1000.0,
+            migrations=int(self.migrations[i]),
+            suspended_frac=float(self.suspended_s[i]) / el,
+            time_on_slice=self.time_on_slice(i),
+            emissions_g=float(self.emissions_g[i]),
+            hours=hours,
+            series=None,
+        )
+
+    def results(self) -> list:
+        return [self.result(i) for i in range(self.n)]
+
+
+class FleetSimulator:
+    """Advance N containers under one policy with array state.
+
+    Usage::
+
+        sim = FleetSimulator(paper_family())
+        res = sim.run(policy, demand,          # (T, N) utilization matrix
+                      carbon,                  # provider | (T,) | (T, N)
+                      targets=45.0)            # scalar or (N,)
+    """
+
+    def __init__(self, family: SliceFamily, interval_s: float = 300.0,
+                 suspend_releases_slice: bool = True,
+                 migration: Optional[MigrationCostModel] = None):
+        self.family = family
+        self.tables = family.tables()
+        self.interval_s = float(interval_s)
+        self.suspend_releases_slice = suspend_releases_slice
+        self.mig = migration or MigrationCostModel()
+
+    # -- inputs -----------------------------------------------------------
+
+    def _carbon_matrix(self, carbon, T: int):
+        """(T,) or (T, N) intensity values at each interval start."""
+        if isinstance(carbon, np.ndarray):
+            return carbon
+        t = np.arange(T, dtype=np.float64) * self.interval_s
+        if hasattr(carbon, "intensity_series"):
+            return carbon.intensity_series(t)
+        return np.array([carbon.intensity(float(x)) for x in t])
+
+    # -- main loop --------------------------------------------------------
+
+    def run(self, policy, demand, carbon, targets, epsilon=0.05,
+            state_gb=1.0, demand_scale=1.0, record: bool = False
+            ) -> FleetResult:
+        t = self.tables
+        dt = self.interval_s
+        demand = np.asarray(demand, dtype=np.float64)
+        if demand.ndim == 1:
+            demand = demand[:, None]
+        T, N = demand.shape
+        if demand_scale is not None and np.any(np.asarray(demand_scale) != 1.0):
+            demand = demand * demand_scale
+        if demand.size and demand.min() < 0.0:
+            raise ValueError("fleet demand must be non-negative")
+        cmat = self._carbon_matrix(carbon, T)
+        if cmat.ndim not in (1, 2) or cmat.shape[0] != T or (
+                cmat.ndim == 2 and cmat.shape[1] != N):
+            raise ValueError(f"carbon matrix shape {cmat.shape} does not "
+                             f"match demand (T={T}, N={N}); expected (T,) "
+                             f"or (T, N)")
+        targets = np.broadcast_to(np.asarray(targets, dtype=np.float64),
+                                  (N,))
+        epsilon = np.broadcast_to(np.asarray(epsilon, dtype=np.float64), (N,))
+        state_gb = np.broadcast_to(np.asarray(state_gb, dtype=np.float64),
+                                   (N,))
+        cf = _closed_form_kind(policy)
+        if cf is not None:
+            return self._run_closed_form(cf, demand, cmat, targets, epsilon,
+                                         record)
+        n_slices = len(t.multiple)
+        st = FleetState.init(N, n_slices, t.baseline_idx)
+        rows = np.arange(N)
+        power_series = np.zeros((T, N)) if record else None
+        served_series = np.zeros((T, N)) if record else None
+        power = np.zeros(N)
+        served = np.zeros(N)
+
+        # loop-invariant precomputations (hoisted out of the time loop):
+        # rolling-window demand peaks (ContainerState.recent_peak) ...
+        peak_mat = demand.copy()
+        for k in range(1, _PEAK_WINDOW):
+            np.maximum(peak_mat[k:], demand[:-k], out=peak_mat[k:])
+        # ... per-interval power budgets for the decision kernels ...
+        cmat2 = cmat if cmat.ndim == 2 else cmat[:, None]
+        budget_mat = _budget_batch(targets[None, :], cmat2, epsilon[None, :])
+        # ... and the demand-integral increments
+        ddt_mat = demand * dt
+
+        with np.errstate(divide="ignore", invalid="ignore"):
+            self._loop(policy, st, demand, cmat, targets, epsilon, state_gb,
+                       budget_mat, peak_mat, ddt_mat, power_series,
+                       served_series, power, served, rows, T, N, n_slices)
+        # elapsed accumulates dt once per interval for every container;
+        # hoisted out of the loop as the identical sequential sum
+        st.elapsed_s.fill(float(np.cumsum(np.full(T, dt))[-1]) if T else 0.0)
+
+        return FleetResult(
+            emissions_g=st.emissions_g,
+            energy_wh=st.energy_wh,
+            work_done=st.work_done,
+            work_demanded=st.demand_integral,
+            throttled_integral=st.throttled_integral,
+            migrations=st.migrations,
+            suspended_s=st.suspended_s,
+            elapsed_s=st.elapsed_s,
+            time_on_slice_s=st.time_on_slice_s,
+            slice_names=t.names + ("suspended",),
+            baseline_cap=float(t.multiple[t.baseline_idx]),
+            power_series=power_series,
+            served_series=served_series,
+        )
+
+    def _loop(self, policy, st, demand, cmat, targets, epsilon, state_gb,
+              budget_mat, peak_mat, ddt_mat, power_series, served_series,
+              power, served, rows, T, N, n_slices):
+        t = self.tables
+        dt = self.interval_s
+        record = power_series is not None
+        c_is_mat = cmat.ndim == 2
+        for n in range(T):
+            d = demand[n]
+            c = cmat[n] if c_is_mat else float(cmat[n])
+            st.demand_integral += ddt_mat[n]
+            st.recent_peak = peak_mat[n]
+
+            power.fill(0.0)
+            served.fill(0.0)
+
+            # ---- migration in progress: both slices powered, no work ----
+            migm = st.migrating_s > 0.0
+            any_mig = np.count_nonzero(migm)
+            if any_mig:
+                dstc = np.where(migm, st.migrate_target, 0)
+                np.copyto(power, t.base_w[st.slice_idx] + t.base_w[dstc],
+                          where=migm)
+
+            kind, dy, tg = policy.decide_batch(t, st, d, c, targets, epsilon,
+                                               budget=budget_mat[n])
+            # fold the migrating containers out of `kind` so the per-action
+            # masks below need no separate `& act`
+            if any_mig:
+                kind = np.where(migm, -1, kind)
+            counts = np.bincount(np.maximum(kind, 0), minlength=4)
+
+            # ---- suspend ------------------------------------------------
+            if counts[K_SUSPEND]:
+                m_sus = kind == K_SUSPEND
+                st.suspended[m_sus] = True
+                st.suspended_s[m_sus] += dt
+                if not self.suspend_releases_slice:
+                    power[m_sus] = t.base_w[st.slice_idx[m_sus]]
+
+            # ---- resume (joins the run path below) ----------------------
+            m_res = None
+            if counts[K_RESUME]:
+                m_res = kind == K_RESUME
+                st.suspended[m_res] = False
+                has_t = m_res & (tg >= 0)
+                st.slice_idx[has_t] = tg[has_t]
+                np.copyto(st.duty, dy, where=m_res)
+
+            m_stay = kind == K_STAY
+            np.copyto(st.duty, dy, where=m_stay)
+
+            # ---- migrate ------------------------------------------------
+            subm = None
+            if counts[K_MIGRATE]:
+                m_mig = kind == K_MIGRATE
+                st.migrations[m_mig] += 1
+                dstc = np.where(m_mig, tg, 0)
+                bw = np.maximum(t.bw_gbps[st.slice_idx], t.bw_gbps[dstc])
+                mig_s = self.mig.stop_and_copy_time_batch(state_gb, bw)
+                down = np.minimum(mig_s, dt) / dt
+                p_mig = t.base_w[st.slice_idx] + t.base_w[dstc]
+                np.copyto(st.duty, dy, where=m_mig)
+                longm = m_mig & (mig_s >= dt)
+                # long migration: whole interval down, src slice accounted
+                np.copyto(st.migrate_target, tg, where=longm)
+                np.copyto(st.migrating_s, mig_s - dt, where=longm)
+                np.copyto(power, p_mig, where=longm)
+                # sub-interval: rest of the interval served on the dest
+                subm = m_mig & ~longm
+                if not np.count_nonzero(subm):
+                    subm = None
+                else:
+                    np.copyto(st.slice_idx, tg, where=subm)
+                    st.dwell[subm] = 0
+
+            # ---- plant step for running containers ----------------------
+            full = m_stay if m_res is None else (m_res | m_stay)
+            if subm is not None or np.count_nonzero(full):
+                mult_cur = t.multiple[st.slice_idx]
+                base_cur = t.base_w[st.slice_idx]
+                cap = mult_cur * np.minimum(np.maximum(st.duty, 0.0), 1.0)
+                srv = np.minimum(d, cap)
+                util = srv / mult_cur        # in [0, 1]: demand >= 0, duty
+                pw = base_cur + (t.peak_w[st.slice_idx] - base_cur) * util
+                #    clipped -> the scalar path's util clamp is an identity
+                np.copyto(power, pw, where=full)
+                np.copyto(served, srv, where=full)
+                if subm is not None:
+                    np.copyto(power, down * p_mig + (1.0 - down) * pw,
+                              where=subm)
+                    np.copyto(served, (1.0 - down) * srv, where=subm)
+
+            # ---- fused accounting (scalar _account, vectorized) ---------
+            st.energy_wh += power * dt / 3600.0
+            st.emissions_g += power * c / 1000.0 * dt / 3600.0
+            st.work_done += served * dt
+            st.throttled_integral += np.maximum(0.0, d - served) * dt
+            tos_col = np.where(st.suspended, n_slices, st.slice_idx)
+            st.time_on_slice_s[rows, tos_col] += dt
+            if record:
+                power_series[n] = power
+                served_series[n] = served
+
+            # ---- migration progress + dwell (after accounting) ----------
+            if any_mig:
+                st.migrating_s[migm] -= dt
+                done = migm & (st.migrating_s <= 0.0)
+                st.slice_idx[done] = st.migrate_target[done]
+                st.migrate_target[done] = -1
+                st.dwell[done] = 0
+            if counts[K_MIGRATE]:
+                st.dwell[(kind >= 0) & (kind != K_MIGRATE)] += 1
+            elif any_mig:
+                st.dwell[kind >= 0] += 1
+            else:
+                st.dwell += 1
+
+    # -- closed-form fast path for state-free policies --------------------
+
+    def _run_closed_form(self, cf: str, demand, cmat, targets, epsilon,
+                         record: bool) -> FleetResult:
+        """Whole-(T, N)-matrix evaluation for policies whose per-interval
+        outcome does not depend on simulation state.
+
+        CarbonAgnosticPolicy never leaves the baseline slice; for
+        SuspendResumePolicy the suspension state each interval equals its
+        (state-independent) over-target predicate. Accumulators use
+        np.cumsum (sequential adds) so results stay bit-identical to the
+        stepping loop.
+        """
+        t = self.tables
+        dt = self.interval_s
+        T, N = demand.shape
+        b = t.baseline_idx
+        mult_b = t.multiple[b]
+        base_b = t.base_w[b]
+        span_b = t.peak_w[b] - base_b
+        c2 = cmat if cmat.ndim == 2 else cmat[:, None]
+
+        srv = np.minimum(demand, mult_b)     # duty 1.0 on the baseline slice
+        util = srv / mult_b
+        pw = base_b + span_b * util          # util in [0, 1] (demand >= 0)
+        n_slices = len(t.multiple)
+        tos = np.zeros((N, n_slices + 1), dtype=np.float64)
+        suspended_s = np.zeros(N, dtype=np.float64)
+        migrations = np.zeros(N, dtype=np.int64)
+        elapsed = float(np.cumsum(np.full(T, dt))[-1]) if T else 0.0
+        elapsed_s = np.full(N, elapsed)
+
+        parts = []                           # step matrices to accumulate
+        if cf == "suspend_resume":
+            # over <=> rate(power(u)) > (1-eps)*target, u == util bitwise
+            over = pw * c2 / 1000.0 > (1.0 - epsilon) * targets
+            p_sus = 0.0 if self.suspend_releases_slice else base_b
+            power = np.where(over, p_sus, pw)
+            served = np.where(over, 0.0, srv)
+            # accumulate dt (not elapsed - suspended) for bit-parity with
+            # the scalar loop's per-interval accumulation at any dt
+            parts.append(np.where(over, dt, 0.0))
+            parts.append(np.where(over, 0.0, dt))
+        else:                                # carbon-agnostic
+            power = pw
+            served = srv
+            tos[:, b] = elapsed_s
+
+        def _chain(a, *ops):         # in-place op chain: same term order,
+            for f, v in ops:         # fewer (T, N) temporaries
+                f(a, v, out=a)
+            return a
+
+        parts = [_chain(power * c2, (np.divide, 1000.0), (np.multiply, dt),
+                        (np.divide, 3600.0)),
+                 _chain(power * dt, (np.divide, 3600.0)),
+                 served * dt,
+                 demand * dt,
+                 _chain(np.maximum(0.0, demand - served),
+                        (np.multiply, dt))] + parts
+        # sequential per-row accumulation (== the stepping loop's add order,
+        # hence bit-identical); one fused (T, k*N) walk
+        stacked = np.concatenate(parts, axis=1)
+        acc = np.zeros(stacked.shape[1], dtype=np.float64)
+        for row in stacked:
+            acc += row
+        emis, energy, work, dem, thr = (acc[k * N:(k + 1) * N]
+                                        for k in range(5))
+        if cf == "suspend_resume":
+            suspended_s = acc[5 * N:6 * N]
+            tos[:, n_slices] = suspended_s
+            tos[:, b] = acc[6 * N:7 * N]
+
+        return FleetResult(
+            emissions_g=emis,
+            energy_wh=energy,
+            work_done=work,
+            work_demanded=dem,
+            throttled_integral=thr,
+            migrations=migrations,
+            suspended_s=suspended_s,
+            elapsed_s=elapsed_s,
+            time_on_slice_s=tos,
+            slice_names=t.names + ("suspended",),
+            baseline_cap=float(t.multiple[t.baseline_idx]),
+            power_series=power if record else None,
+            served_series=served if record else None,
+        )
+
+
+def _closed_form_kind(policy) -> Optional[str]:
+    """Exact-type dispatch: subclasses may override decide(), so only the
+    stock baseline policies take the closed-form path."""
+    from repro.core.policy import (CarbonAgnosticPolicy,
+                                   SuspendResumePolicy)
+    if type(policy) is CarbonAgnosticPolicy:
+        return "agnostic"
+    if type(policy) is SuspendResumePolicy:
+        return "suspend_resume"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Multi-policy batching: dispatch decide_batch over contiguous column blocks
+# ---------------------------------------------------------------------------
+
+class _StateView:
+    """Sliced view of a FleetState for one policy's column block."""
+
+    __slots__ = ("slice_idx", "suspended", "dwell", "recent_peak")
+
+    def __init__(self, st: FleetState, sl: slice):
+        self.slice_idx = st.slice_idx[sl]
+        self.suspended = st.suspended[sl]
+        self.dwell = st.dwell[sl]
+        self.recent_peak = st.recent_peak[sl]
+
+
+class BlockPolicy:
+    """Compose several policies into one fleet, each owning a contiguous
+    column block. Lets a whole (policy x target x trace) sweep advance in a
+    single FleetSimulator.run, amortizing per-step overhead across all
+    policies (containers never interact, so results are unchanged)."""
+
+    def __init__(self, blocks):
+        self.blocks = list(blocks)        # [(policy, slice), ...]
+
+    def decide_batch(self, t, state, demand, c, target, eps, budget=None):
+        n = demand.shape[0]
+        kind = np.empty(n, dtype=np.int64)
+        duty = np.empty(n, dtype=np.float64)
+        tgt = np.empty(n, dtype=np.int64)
+        for pol, sl in self.blocks:
+            c_b = c[sl] if isinstance(c, np.ndarray) else c
+            b_b = budget[sl] if budget is not None else None
+            k, dy, tg = pol.decide_batch(t, _StateView(state, sl),
+                                         demand[sl], c_b, target[sl], eps[sl],
+                                         budget=b_b)
+            kind[sl] = k
+            duty[sl] = dy
+            tgt[sl] = tg
+        return kind, duty, tgt
+
+
+# ---------------------------------------------------------------------------
+# Population sweep on the fleet path (backend="fleet" in sweep_population)
+# ---------------------------------------------------------------------------
+
+def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
+                           carbon, targets: Sequence[float],
+                           cfg_base: SimConfig,
+                           demand_scale: float = 1.0) -> list:
+    """Fleet-backed `sweep_population`: batches every (policy x target x
+    trace) combination into ONE FleetSimulator.run call (policy-major
+    column blocks via BlockPolicy) and emits the same aggregate rows, in
+    the same order, as the scalar backend."""
+    traces = [np.asarray(tr, dtype=np.float64) for tr in traces]
+    lengths = {len(tr) for tr in traces}
+    if len(lengths) != 1:
+        raise ValueError("fleet backend needs equal-length traces; "
+                         f"got lengths {sorted(lengths)}")
+    n_tr = len(traces)
+    n_tg = len(targets)
+    per_pol = n_tr * n_tg
+    demand_one = np.tile(np.stack(traces, axis=1), (1, n_tg))  # (T, per_pol)
+    tgt_one = np.repeat(np.asarray(targets, dtype=np.float64), n_tr)
+
+    sim = FleetSimulator(family, interval_s=cfg_base.interval_s,
+                         suspend_releases_slice=cfg_base.suspend_releases_slice)
+    run_kw = dict(epsilon=cfg_base.epsilon, state_gb=cfg_base.state_gb,
+                  demand_scale=demand_scale)
+
+    # state-free policies go straight through the closed-form path; the
+    # stateful rest share one stepping run via BlockPolicy column blocks
+    results = {}                          # name -> (FleetResult, col offset)
+    loop_pols = []
+    for name, mk_policy in policies.items():
+        pol = mk_policy()
+        if _closed_form_kind(pol) is not None:
+            results[name] = (sim.run(pol, demand_one, carbon, tgt_one,
+                                     **run_kw), 0)
+        else:
+            loop_pols.append((name, pol))
+    if len(loop_pols) == 1:                   # skip block-dispatch overhead
+        name, pol = loop_pols[0]
+        results[name] = (sim.run(pol, demand_one, carbon, tgt_one,
+                                 **run_kw), 0)
+    elif loop_pols:
+        blocks = [(pol, slice(p * per_pol, (p + 1) * per_pol))
+                  for p, (_, pol) in enumerate(loop_pols)]
+        demand = np.tile(demand_one, (1, len(loop_pols)))
+        tgt_vec = np.tile(tgt_one, len(loop_pols))
+        res = sim.run(BlockPolicy(blocks), demand, carbon, tgt_vec, **run_kw)
+        for p, (name, _) in enumerate(loop_pols):
+            results[name] = (res, p * per_pol)
+
+    rows = []
+    for ti, target in enumerate(targets):
+        for name in policies:
+            res, off = results[name]
+            rates_a = res.avg_carbon_rate
+            thr_a = res.avg_throttle_pct
+            susp_a = res.suspended_frac
+            idx = range(off + ti * n_tr, off + (ti + 1) * n_tr)
+            rates = [float(rates_a[i]) for i in idx]
+            thr = [float(thr_a[i]) for i in idx]
+            migs = [int(res.migrations[i]) for i in idx]
+            susp = [float(susp_a[i]) for i in idx]
+            slice_time: dict = {}
+            for i in idx:
+                for k, v in res.time_on_slice(i).items():
+                    slice_time[k] = slice_time.get(k, 0.0) + v / n_tr
+            rows.append({
+                "policy": name, "target": target,
+                "carbon_rate_mean": float(np.mean(rates)),
+                "carbon_rate_std": float(np.std(rates)),
+                "throttle_mean": float(np.mean(thr)),
+                "throttle_std": float(np.std(thr)),
+                "migrations_mean": float(np.mean(migs)),
+                "suspended_frac_mean": float(np.mean(susp)),
+                "time_on_slice": slice_time,
+            })
+    return rows

@@ -30,7 +30,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.cluster.slices import SliceFamily
+import numpy as np
+
+from repro.cluster.slices import FamilyTables, SliceFamily
 from repro.core.container import ContainerState, PlantModel
 
 
@@ -45,11 +47,76 @@ class Action:
     target_slice: Optional[int] = None
 
 
+# integer action codes for the vectorized (fleet) decision kernels
+K_STAY, K_MIGRATE, K_SUSPEND, K_RESUME = 0, 1, 2, 3
+
+
 def _power_budget_w(target: float, c_intensity: float, eps: float) -> float:
     """Max power keeping C = p*c/1000 <= (1-eps)*target."""
     if c_intensity <= 0:
         return float("inf")
     return (1.0 - eps) * target * 1000.0 / c_intensity
+
+
+# ---------------------------------------------------------------------------
+# Vectorized building blocks (fleet path)
+#
+# Each helper mirrors its scalar counterpart term-for-term so that a fleet
+# of N containers advances bit-identically to N scalar simulations.
+# ---------------------------------------------------------------------------
+
+def _budget_batch(target, c, eps):
+    """Vectorized `_power_budget_w` over per-container (target, c, eps)."""
+    c_safe = np.where(c <= 0.0, 1.0, c)
+    return np.where(c <= 0.0, np.inf, (1.0 - eps) * target * 1000.0 / c_safe)
+
+
+def _power_batch(t: FamilyTables, idx, util):
+    """LinearPowerModel.power for slice indices `idx` at `util`."""
+    b = t.base_w[idx]
+    u = np.minimum(np.maximum(util, 0.0), 1.0)
+    return b + (t.peak_w[idx] - b) * u
+
+
+def _util_for_power_batch(t: FamilyTables, idx, watts):
+    """LinearPowerModel.util_for_power for slice indices `idx`."""
+    b = t.base_w[idx]
+    p = t.peak_w[idx]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        u = np.minimum(1.0, (watts - b) / (p - b))
+    u = np.where(p <= b, 1.0, u)
+    return np.where(watts <= b, 0.0, u)
+
+
+def _best_fit_up_batch(t: FamilyTables, i, demand, budget, active0=None):
+    """Vectorized `_best_fit_up`: smallest larger slice serving `demand`
+    within `budget`, walking the same next-larger chain as the scalar loop
+    (including its give-up-on-first-overbudget semantics). Returns -1 where
+    no fit exists. `active0` restricts the walk to the (typically sparse)
+    subset of containers that need it — the walk then runs compacted."""
+    res = np.full(i.shape, -1, dtype=np.int64)
+    if active0 is not None:
+        idx = np.flatnonzero(active0)
+        if idx.size == 0:
+            return res
+        sub = _best_fit_up_batch(t, i[idx], demand[idx], budget[idx])
+        res[idx] = sub
+        return res
+    k = t.next_larger[i]
+    active = k >= 0
+    kk = np.where(active, k, 0)
+    for _ in range(len(t.multiple)):
+        if not np.count_nonzero(active):
+            break
+        u_k = np.minimum(demand / t.multiple[kk], 1.0)
+        fits = _power_batch(t, kk, u_k) <= budget
+        nl_k = t.next_larger[kk]
+        final = fits & ((demand <= t.multiple[kk]) | (nl_k < 0))
+        res = np.where(active & final, kk, res)
+        cont = active & fits & ~final          # demand > capacity, larger exists
+        kk = np.where(cont, nl_k, kk)
+        active = cont
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +229,178 @@ class CarbonContainerPolicy:
             return Action("migrate", duty=1.0, target_slice=k)
         return Action("stay", duty=min(1.0, u_cap_i))
 
+    def decide_batch(self, t: FamilyTables, state, demand, c, target, eps,
+                     budget=None):
+        """Vectorized `decide` over N containers.
+
+        `state` exposes (N,) arrays: slice_idx, suspended, dwell,
+        recent_peak. Returns (kind, duty, target_slice) as (N,) arrays with
+        kind in {K_STAY, K_MIGRATE, K_SUSPEND, K_RESUME} and target_slice
+        -1 where the action carries none. Branches are resolved with masks
+        in the exact order of the scalar return statements (`decided`
+        tracks which containers already hit an earlier return site).
+        `budget` may carry a precomputed `_budget_batch(target, c, eps)`
+        row (the fleet loop hoists it out of the time loop).
+
+        `demand` must be non-negative (FleetSimulator.run enforces this):
+        inverse-power caps (u_cap_*) are in [0, 1] by construction and
+        demand-derived utilizations are then in [0, 1] too, so the scalar
+        path's max(., 0)/min(1., .) clamps are exact identities and elided.
+        Degenerate (peak <= base) power curves divide by zero here; the
+        np.where fixups keep the values correct and FleetSimulator.run
+        suppresses the warnings (scalar-equivalent behaviour).
+        """
+        n = demand.shape[0]
+        if budget is None:
+            budget = _budget_batch(target, c, eps)
+        i = state.slice_idx
+        base_i = t.base_w[i]
+        peak_i = t.peak_w[i]
+        span_i = peak_i - base_i
+        mult_i = t.multiple[i]
+        can_mig = bool(self.allow_migration)
+
+        # output/bookkeeping scratch, reused across calls (contents are
+        # valid until the next decide_batch call on this policy object)
+        sc = getattr(self, "_scratch", None)
+        if sc is None or sc[0].shape[0] != n:
+            sc = (np.empty(n, dtype=np.int64), np.empty(n, dtype=np.float64),
+                  np.empty(n, dtype=np.int64), np.empty(n, dtype=bool))
+            self._scratch = sc
+        kind, duty, tgt, decided = sc
+        kind.fill(K_STAY)
+        duty.fill(0.0)
+        tgt.fill(-1)
+        decided.fill(False)
+
+        # --- suspended: resume when the smallest slice fits the budget ----
+        sus_any = np.count_nonzero(state.suspended)
+        if sus_any:
+            j0 = t.smallest
+            u_cap_j0 = _util_for_power_batch(t, j0, budget)
+            m = state.suspended & (t.base_w[j0] <= budget) & (u_cap_j0 > 0.0)
+            kind[m] = K_RESUME
+            np.copyto(duty, u_cap_j0, where=m)
+            tgt[m] = j0
+            m = state.suspended & ~m
+            kind[m] = K_SUSPEND
+            decided |= state.suspended
+
+        # inline power / inverse-power on cached (base, span) gathers —
+        # identical term order to LinearPowerModel.power/util_for_power
+        # (for well-formed families the peak<=base fixup is an identity)
+        ns = t.next_smaller[i]
+        has_j = ns >= 0
+        jj = np.where(has_j, ns, 0)
+        base_j = t.base_w[jj]
+        peak_j = t.peak_w[jj]
+        span_j = peak_j - base_j
+        mult_j = t.multiple[jj]
+        u_cap_i = np.minimum(1.0, (budget - base_i) / span_i)
+        if not t.well_formed:
+            u_cap_i = np.where(peak_i <= base_i, 1.0, u_cap_i)
+        u_cap_i = np.where(budget <= base_i, 0.0, u_cap_i)
+        u_cap_j = np.minimum(1.0, (budget - base_j) / span_j)
+        if not t.well_formed:
+            u_cap_j = np.where(peak_j <= base_j, 1.0, u_cap_j)
+        u_cap_j = np.where(budget <= base_j, 0.0, u_cap_j)
+        u_need_i = np.minimum(demand / mult_i, 1.0)
+        pw_need_i = base_i + span_i * u_need_i
+        base_over = base_i > budget
+        over = (pw_need_i > budget) | base_over
+
+        # --- over target, even idle exceeds the budget on this slice ------
+        hard = over & (base_over | (u_cap_i <= 0.0))
+        if sus_any:
+            hard &= ~decided
+        if np.count_nonzero(hard):
+            if can_mig:
+                m = hard & has_j & (base_j <= budget)
+                kind[m] = K_MIGRATE
+                np.copyto(duty, u_cap_j, where=m)
+                np.copyto(tgt, jj, where=m)
+                decided |= m
+                m = hard & has_j & ~decided        # fall through toward smallest
+                kind[m] = K_MIGRATE
+                np.copyto(tgt, jj, where=m)
+                decided |= m
+                m = hard & ~has_j & (i == t.smallest)
+                kind[m] = K_SUSPEND
+                decided |= m
+                decided |= hard                    # remainder: stay, duty 0
+            else:
+                kind[hard] = K_SUSPEND
+                decided |= hard
+
+        # --- over target: vertical scale down; consider next smaller ------
+        soft = over & ~decided
+        q_new = u_cap_i
+        if np.count_nonzero(soft):
+            if can_mig:
+                throttle_i = np.maximum(0.0, demand - mult_i * q_new)
+                u_qi = np.minimum(q_new, u_need_i)
+                c_i = (base_i + span_i * u_qi) * c / 1000.0
+                u_j = np.minimum(np.minimum(demand / mult_j, u_cap_j), 1.0)
+                throttle_j = np.maximum(0.0, demand - mult_j * u_j)
+                c_j = (base_j + span_j * u_j) * c / 1000.0
+                m = (soft & has_j & (c_j < c_i)
+                     & (throttle_j <= throttle_i + 1e-12))
+                kind[m] = K_MIGRATE
+                np.copyto(duty, u_cap_j, where=m)
+                np.copyto(tgt, jj, where=m)
+                decided |= m
+            m = soft & ~decided
+            np.copyto(duty, q_new, where=m)        # kind stays K_STAY
+            decided |= m
+
+        below = ~decided
+        if self.variant == "energy":
+            if can_mig:
+                can_idle = state.dwell >= self.min_dwell
+                peak = np.maximum(state.recent_peak, demand)
+                u_jp = peak / mult_j
+                pw_jp = base_j + span_j * np.minimum(u_jp, 1.0)
+                m = (below & can_idle & has_j
+                     & (u_jp <= np.minimum(u_cap_j, 0.9))
+                     & (pw_jp < (1.0 - self.idle_margin) * pw_need_i))
+                if np.count_nonzero(m):
+                    kind[m] = K_MIGRATE
+                    np.copyto(duty, u_cap_j, where=m)
+                    np.copyto(tgt, jj, where=m)
+                    decided |= m
+                throttled = below & ~decided & (demand > mult_i * u_cap_i)
+                if np.count_nonzero(throttled):
+                    k_up = _best_fit_up_batch(t, i, demand, budget,
+                                              active0=throttled)
+                    m = throttled & (k_up >= 0)
+                    kind[m] = K_MIGRATE
+                    duty[m] = 1.0
+                    np.copyto(tgt, k_up, where=m)
+                    decided |= m
+            m = below & ~decided
+            np.copyto(duty, u_cap_i, where=m)      # kind stays K_STAY
+        else:
+            # performance: climb while the larger slice fits 0.9x budget
+            k = i.copy()
+            climbing = below & can_mig & (state.dwell >= self.min_dwell)
+            for _ in range(len(t.multiple)):
+                if not np.count_nonzero(climbing):
+                    break
+                nxt = t.next_larger[k]
+                has = climbing & (nxt >= 0)
+                kk = np.where(has, nxt, 0)
+                u_n = np.minimum(demand / t.multiple[kk], 1.0)
+                ok = has & (_power_batch(t, kk, u_n) <= 0.9 * budget)
+                k = np.where(ok, kk, k)
+                climbing = ok
+            m = below & (k != i)
+            kind[m] = K_MIGRATE
+            duty[m] = 1.0
+            np.copyto(tgt, k, where=m)
+            m = below & (k == i)
+            np.copyto(duty, u_cap_i, where=m)      # kind stays K_STAY
+        return kind, duty, tgt
+
     @staticmethod
     def _best_fit_up(family: SliceFamily, i: int, demand: float,
                      budget_w: float):
@@ -192,6 +431,18 @@ class CarbonAgnosticPolicy:
             return Action("migrate", duty=1.0, target_slice=family.baseline_idx)
         return Action("stay", duty=1.0)
 
+    def decide_batch(self, t: FamilyTables, state, demand, c, target, eps,
+                     budget=None):
+        n = demand.shape[0]
+        kind = np.zeros(n, dtype=np.int64)           # default: K_STAY
+        duty = np.ones(n, dtype=np.float64)
+        tgt = np.full(n, -1, dtype=np.int64)
+        off_base = state.slice_idx != t.baseline_idx
+        if np.count_nonzero(off_base):
+            kind[off_base] = K_MIGRATE
+            tgt[off_base] = t.baseline_idx
+        return kind, duty, tgt
+
 
 @dataclass
 class SuspendResumePolicy:
@@ -210,6 +461,18 @@ class SuspendResumePolicy:
         if over:
             return Action("suspend")
         return Action("stay", duty=1.0)
+
+    def decide_batch(self, t: FamilyTables, state, demand, c, target, eps,
+                     budget=None):
+        b = t.baseline_idx
+        u = np.minimum(demand / t.multiple[b], 1.0)
+        pw = _power_batch(t, b, u)
+        over = pw * c / 1000.0 > (1.0 - eps) * target
+        kind = np.where(over, K_SUSPEND,
+                        np.where(state.suspended, K_RESUME, K_STAY))
+        duty = np.ones(demand.shape[0], dtype=np.float64)
+        tgt = np.where(kind == K_RESUME, b, -1)
+        return kind, duty, tgt
 
 
 def VScaleOnlyPolicy(variant: str = "energy") -> CarbonContainerPolicy:

@@ -189,8 +189,21 @@ def _record(series, cfg, t, rate, st, util, demand, served):
 
 def sweep_population(policies: dict, family: SliceFamily, traces, carbon,
                      targets: Sequence[float], cfg_base: SimConfig,
-                     demand_scale: float = 1.0) -> list:
-    """Returns rows: {policy, target, mean/std of carbon rate + throttle}."""
+                     demand_scale: float = 1.0,
+                     backend: str = "scalar") -> list:
+    """Returns rows: {policy, target, mean/std of carbon rate + throttle}.
+
+    `backend="fleet"` batches all (target x trace) pairs per policy through
+    the vectorized `repro.core.fleet.FleetSimulator` — same rows, same
+    order, ~20-100x faster on population-scale sweeps.
+    """
+    if backend == "fleet":
+        from repro.core.fleet import sweep_population_fleet
+        return sweep_population_fleet(policies, family, traces, carbon,
+                                      targets, cfg_base,
+                                      demand_scale=demand_scale)
+    if backend != "scalar":
+        raise ValueError(f"unknown sweep backend {backend!r}")
     rows = []
     for target in targets:
         for name, mk_policy in policies.items():
@@ -199,7 +212,8 @@ def sweep_population(policies: dict, family: SliceFamily, traces, carbon,
             for tr in traces:
                 cfg = SimConfig(target_rate=target, epsilon=cfg_base.epsilon,
                                 interval_s=cfg_base.interval_s,
-                                state_gb=cfg_base.state_gb)
+                                state_gb=cfg_base.state_gb,
+                                suspend_releases_slice=cfg_base.suspend_releases_slice)
                 res = simulate(mk_policy(), family, tr, carbon, cfg,
                                demand_scale=demand_scale)
                 rates.append(res.avg_carbon_rate)

@@ -11,6 +11,8 @@ from repro.configs import ARCHS
 from repro.configs.registry import all_cells
 from repro.models import get_model
 
+pytestmark = pytest.mark.slow  # JAX model/kernel suite: excluded from the fast lane
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -1,0 +1,328 @@
+"""Vectorized fleet simulator: scalar-parity and conservation invariants.
+
+The parity tests are what make the fleet refactor safe: an N=1
+`FleetSimulator` run must reproduce `simulate()`'s SimResult fields to
+1e-9 (in practice bit-for-bit) for every policy across (target, epsilon,
+state_gb, suspend_releases_slice) combos, and an N-container batch must
+equal N independent scalar runs. Conservation invariants then pin the
+physics of both backends.
+"""
+import numpy as np
+import pytest
+
+from repro.carbon.intensity import ConstantProvider, TraceProvider
+from repro.cluster.slices import paper_family, tpu_v5e_family
+from repro.core.fleet import BlockPolicy, FleetSimulator
+from repro.core.policy import (CarbonAgnosticPolicy, CarbonContainerPolicy,
+                               SuspendResumePolicy, VScaleOnlyPolicy)
+from repro.core.simulator import SimConfig, simulate, sweep_population
+from repro.workload.azure_like import sample_population
+
+PARITY_FIELDS = ("emissions_g", "work_done", "migrations", "suspended_frac",
+                 "avg_throttle_pct", "avg_carbon_rate", "energy_kwh",
+                 "work_demanded", "hours")
+
+POLICIES = {
+    "carbon_agnostic": CarbonAgnosticPolicy,
+    "suspend_resume": SuspendResumePolicy,
+    "vscale_only": lambda: VScaleOnlyPolicy(),
+    "cc_energy": lambda: CarbonContainerPolicy("energy"),
+    "cc_performance": lambda: CarbonContainerPolicy("performance"),
+}
+
+# (target g/hr, epsilon, state_gb, suspend_releases_slice)
+COMBOS = [
+    (10.0, 0.05, 1.0, True),     # floor-bound: forces suspends
+    (45.0, 0.05, 0.5, True),     # paper's mid target
+    (45.0, 0.10, 2.0, False),    # suspended slice stays powered
+    (80.0, 0.00, 0.25, True),    # loose target, eps off, fast migrations
+]
+
+
+def _traces(n, days=3, seed=2):
+    return [t.util for t in sample_population(n, days=days, seed=seed)]
+
+
+def _carbon(days=3):
+    return TraceProvider.for_region("CAISO", hours=24 * days, seed=1)
+
+
+def _assert_result_close(rs, rf, tol=1e-9, ctx=""):
+    for f in PARITY_FIELDS:
+        a, b = getattr(rs, f), getattr(rf, f)
+        assert abs(a - b) <= tol, f"{ctx}: {f} scalar={a!r} fleet={b!r}"
+    keys = set(rs.time_on_slice) | set(rf.time_on_slice)
+    for k in keys:
+        a = rs.time_on_slice.get(k, 0.0)
+        b = rf.time_on_slice.get(k, 0.0)
+        assert abs(a - b) <= tol, f"{ctx}: time_on_slice[{k}] {a} vs {b}"
+
+
+# ---------------------------------------------------------------------------
+# N=1 parity: every policy x every config combo
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy_name", sorted(POLICIES))
+@pytest.mark.parametrize("combo", COMBOS, ids=lambda c: f"t{c[0]:g}-e{c[1]:g}"
+                         f"-g{c[2]:g}-{'rel' if c[3] else 'hold'}")
+def test_fleet_n1_matches_scalar(policy_name, combo):
+    target, eps, sgb, srs = combo
+    mk = POLICIES[policy_name]
+    fam = paper_family()
+    carbon = _carbon()
+    for ti, tr in enumerate(_traces(2)):
+        cfg = SimConfig(target_rate=target, epsilon=eps, state_gb=sgb,
+                        suspend_releases_slice=srs)
+        rs = simulate(mk(), fam, tr, carbon, cfg)
+        sim = FleetSimulator(fam, suspend_releases_slice=srs)
+        rf = sim.run(mk(), np.asarray(tr)[:, None], carbon, target,
+                     epsilon=eps, state_gb=sgb).result(0)
+        _assert_result_close(rs, rf, ctx=f"{policy_name} {combo} trace{ti}")
+
+
+def test_fleet_n1_constant_carbon_and_tpu_family():
+    fam = tpu_v5e_family()
+    tr = np.asarray(_traces(1, days=1)[0])
+    for c in (50.0, 400.0, 800.0):
+        cfg = SimConfig(target_rate=2000.0, state_gb=8.0)
+        rs = simulate(CarbonContainerPolicy("energy"), fam, tr,
+                      ConstantProvider(c), cfg)
+        rf = FleetSimulator(fam).run(CarbonContainerPolicy("energy"),
+                                     tr[:, None], ConstantProvider(c),
+                                     2000.0, state_gb=8.0).result(0)
+        _assert_result_close(rs, rf, ctx=f"tpu c={c}")
+
+
+# ---------------------------------------------------------------------------
+# Batch parity: N heterogeneous containers == N independent scalar runs
+# ---------------------------------------------------------------------------
+
+def test_fleet_batch_equals_independent_scalar_runs():
+    fam = paper_family()
+    days = 3
+    traces = _traces(6, days=days)
+    T = len(traces[0])
+    regions = ["CAISO", "NL", "PL"]
+    provs = [TraceProvider.for_region(r, hours=24 * days, seed=1)
+             for r in regions]
+    tvec = np.arange(T) * 300.0
+    n = len(traces)
+    cmat = np.stack([provs[i % 3].intensity_series(tvec) for i in range(n)],
+                    axis=1)
+    targets = np.array([15.0, 30.0, 45.0, 60.0, 80.0, 120.0])
+    sgb = np.array([0.25, 0.5, 1.0, 2.0, 1.0, 0.5])
+    dscale = np.array([1.0, 0.5, 2.0, 1.0, 1.5, 0.8])
+    demand = np.stack(traces, axis=1)
+
+    for name, mk in POLICIES.items():
+        rf = FleetSimulator(fam).run(mk(), demand, cmat, targets,
+                                     state_gb=sgb, demand_scale=dscale)
+        for i in range(n):
+            cfg = SimConfig(target_rate=float(targets[i]),
+                            state_gb=float(sgb[i]))
+            rs = simulate(mk(), fam, traces[i], provs[i % 3], cfg,
+                          demand_scale=float(dscale[i]))
+            _assert_result_close(rs, rf.result(i), ctx=f"{name} col{i}")
+
+
+def test_block_policy_mixes_policies_without_interaction():
+    fam = paper_family()
+    traces = _traces(2)
+    demand = np.concatenate([np.stack(traces, axis=1)] * 2, axis=1)
+    carbon = _carbon()
+    blocks = [(CarbonContainerPolicy("energy"), slice(0, 2)),
+              (CarbonContainerPolicy("performance"), slice(2, 4))]
+    rf = FleetSimulator(fam).run(BlockPolicy(blocks), demand, carbon, 45.0)
+    for i, (mk, tr) in enumerate([("energy", traces[0]), ("energy", traces[1]),
+                                  ("performance", traces[0]),
+                                  ("performance", traces[1])]):
+        rs = simulate(CarbonContainerPolicy(mk), fam, tr, carbon,
+                      SimConfig(target_rate=45.0))
+        _assert_result_close(rs, rf.result(i), ctx=f"block {mk} col{i}")
+
+
+def test_sweep_population_backends_agree():
+    fam = paper_family()
+    traces = _traces(4, days=2)
+    carbon = _carbon(days=2)
+    pols = {"carbon_agnostic": CarbonAgnosticPolicy,
+            "suspend_resume": SuspendResumePolicy,
+            "carbon_containers": lambda: CarbonContainerPolicy("energy")}
+    targets = [25.0, 55.0]
+    cfgb = SimConfig(target_rate=0.0)
+    rows_s = sweep_population(pols, fam, traces, carbon, targets, cfgb)
+    rows_f = sweep_population(pols, fam, traces, carbon, targets, cfgb,
+                              backend="fleet")
+    assert len(rows_s) == len(rows_f)
+    for a, b in zip(rows_s, rows_f):
+        assert a["policy"] == b["policy"] and a["target"] == b["target"]
+        for k in ("carbon_rate_mean", "carbon_rate_std", "throttle_mean",
+                  "throttle_std", "migrations_mean", "suspended_frac_mean"):
+            assert abs(a[k] - b[k]) <= 1e-9, (a["policy"], a["target"], k)
+        for k in set(a["time_on_slice"]) | set(b["time_on_slice"]):
+            assert abs(a["time_on_slice"].get(k, 0.0)
+                       - b["time_on_slice"].get(k, 0.0)) <= 1e-9
+
+
+def test_sweep_population_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        sweep_population({}, paper_family(), [], None, [],
+                         SimConfig(target_rate=0.0), backend="quantum")
+
+
+# ---------------------------------------------------------------------------
+# Conservation invariants (both backends)
+# ---------------------------------------------------------------------------
+
+def _fleet_run_recorded(mk, fam, traces, carbon, target, srs=True):
+    demand = np.stack([np.asarray(tr) for tr in traces], axis=1)
+    sim = FleetSimulator(fam, suspend_releases_slice=srs)
+    res = sim.run(mk(), demand, carbon, target, record=True)
+    return demand, res
+
+
+@pytest.mark.parametrize("policy_name", sorted(POLICIES))
+def test_fleet_conservation_invariants(policy_name):
+    mk = POLICIES[policy_name]
+    fam = paper_family()
+    carbon = _carbon(days=2)
+    demand, res = _fleet_run_recorded(mk, fam, _traces(3, days=2), carbon,
+                                      35.0)
+    dt = 300.0
+    # served <= demand per interval; both non-negative
+    assert (res.served_series >= 0.0).all()
+    assert (res.served_series <= demand + 1e-12).all()
+    # power (hence energy and emissions increments) non-negative and
+    # monotone accumulation
+    assert (res.power_series >= 0.0).all()
+    energy_check = res.power_series.sum(axis=0) * dt / 3600.0
+    assert np.allclose(energy_check, res.energy_wh, rtol=1e-9, atol=1e-6)
+    assert (res.emissions_g >= 0.0).all()
+    assert (res.energy_wh >= 0.0).all()
+    # time_on_slice fractions sum to ~1
+    fracs = res.time_on_slice_s.sum(axis=1) / res.elapsed_s
+    assert np.allclose(fracs, 1.0, atol=1e-9)
+    # work conservation: work_done + throttled_integral == demand_integral
+    assert np.allclose(res.work_done + res.throttled_integral,
+                       res.work_demanded, rtol=1e-9, atol=1e-6)
+
+
+@pytest.mark.parametrize("policy_name", sorted(POLICIES))
+def test_scalar_conservation_invariants(policy_name):
+    mk = POLICIES[policy_name]
+    fam = paper_family()
+    carbon = _carbon(days=2)
+    tr = _traces(1, days=2)[0]
+    cfg = SimConfig(target_rate=35.0, record_series=True)
+    res = simulate(mk(), fam, tr, carbon, cfg)
+    s = res.series
+    served = np.asarray(s["served"])
+    dem = np.asarray(s["demand"])
+    assert (served >= 0.0).all() and (served <= dem + 1e-12).all()
+    assert (np.asarray(s["carbon_rate"]) >= -1e-12).all()
+    assert res.emissions_g >= 0.0 and res.energy_kwh >= 0.0
+    assert abs(sum(res.time_on_slice.values()) - 1.0) < 1e-9
+    # work conservation, via the throttle definition
+    thr_integral = (res.avg_throttle_pct / 100.0 * (res.hours * 3600.0)
+                    * fam.baseline.multiple)
+    assert abs((res.work_done + thr_integral) - res.work_demanded) \
+        <= 1e-6 * max(res.work_demanded, 1.0)
+
+
+def test_fleet_emissions_monotone_over_time():
+    fam = paper_family()
+    carbon = _carbon(days=1)
+    tr = np.asarray(_traces(1, days=1)[0])
+    res = FleetSimulator(fam).run(CarbonContainerPolicy("energy"),
+                                  tr[:, None], carbon, 45.0, record=True)
+    co2_steps = res.power_series[:, 0]  # >= 0 -> cumulative emissions monotone
+    assert (np.cumsum(co2_steps) >= -1e-12).all()
+    assert (np.diff(np.cumsum(co2_steps)) >= -1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+def test_fleet_rejects_negative_demand():
+    fam = paper_family()
+    with pytest.raises(ValueError):
+        FleetSimulator(fam).run(CarbonAgnosticPolicy(),
+                                np.array([[0.5], [-0.1]]),
+                                ConstantProvider(100.0), 45.0)
+
+
+def test_fleet_rejects_unequal_trace_lengths():
+    fam = paper_family()
+    pols = {"cc": lambda: CarbonContainerPolicy("energy")}
+    with pytest.raises(ValueError):
+        sweep_population(pols, fam, [np.ones(10), np.ones(12)],
+                         ConstantProvider(100.0), [45.0],
+                         SimConfig(target_rate=0.0), backend="fleet")
+
+
+def test_family_tables_snapshot_availability():
+    fam = paper_family()
+    t0 = fam.tables()
+    assert t0.next_smaller[0] == -1
+    assert t0.next_larger[len(fam) - 1] == -1
+    assert t0.smallest == 0
+    fam.available[0] = False
+    t1 = fam.tables()
+    assert t1.smallest == 1
+    assert t1.next_smaller[1] == -1
+    # the old snapshot is unchanged (tables() snapshots availability)
+    assert t0.smallest == 0
+
+
+def test_fleet_zero_bandwidth_falls_back_like_scalar():
+    """Slices with state_bw_gbps=0 use the migration model's default
+    bandwidth on both backends (scalar: `transfer_gbps or default`)."""
+    from dataclasses import replace
+    from repro.cluster.slices import SliceFamily
+    fam0 = paper_family()
+    fam = SliceFamily([replace(s, state_bw_gbps=0.0) for s in fam0.slices],
+                      baseline_idx=fam0.baseline_idx)
+    tr = _traces(1, days=2)[0]
+    carbon = _carbon(days=2)
+    cfg = SimConfig(target_rate=30.0, state_gb=1.0)
+    rs = simulate(CarbonContainerPolicy("energy"), fam, tr, carbon, cfg)
+    rf = FleetSimulator(fam).run(CarbonContainerPolicy("energy"),
+                                 np.asarray(tr)[:, None], carbon,
+                                 30.0, state_gb=1.0).result(0)
+    assert rs.migrations > 0          # migrations actually exercised
+    _assert_result_close(rs, rf, ctx="zero bandwidth")
+
+
+def test_fleet_respects_slice_availability():
+    """tables() snapshots availability; parity holds with a slice removed."""
+    fam = paper_family()
+    fam.available[0] = False
+    tr = np.full(24 * 12, 0.2)
+    cfg = SimConfig(target_rate=1000.0, state_gb=0.5)
+    rs = simulate(CarbonContainerPolicy("energy"), fam, tr,
+                  ConstantProvider(100.0), cfg)
+    rf = FleetSimulator(fam).run(CarbonContainerPolicy("energy"),
+                                 tr[:, None], ConstantProvider(100.0),
+                                 1000.0, state_gb=0.5).result(0)
+    _assert_result_close(rs, rf, ctx="unavailable slice")
+    assert rf.time_on_slice.get("x0.25", 0.0) == 0.0
+
+
+def test_fleet_heterogeneous_regions_differ():
+    """Mixed-region stacked carbon traces actually flow per-container."""
+    fam = paper_family()
+    tr = np.asarray(_traces(1, days=2)[0])
+    T = len(tr)
+    tvec = np.arange(T) * 300.0
+    hi = TraceProvider.for_region("PL", hours=48, seed=1)    # dirty grid
+    lo = TraceProvider.for_region("CAISO", hours=48, seed=1)
+    cmat = np.stack([hi.intensity_series(tvec), lo.intensity_series(tvec)],
+                    axis=1)
+    demand = np.stack([tr, tr], axis=1)
+    res = FleetSimulator(fam).run(CarbonContainerPolicy("energy"), demand,
+                                  cmat, 45.0)
+    # same demand + same target, dirtier grid => at least as much throttle
+    # and the two containers must not be identical
+    assert res.emissions_g[0] != res.emissions_g[1]
+    assert res.avg_throttle_pct[0] >= res.avg_throttle_pct[1] - 1e-9

@@ -10,6 +10,8 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rglru_scan import rglru_pallas
 from repro.kernels.ssd_scan import ssd_pallas
 
+pytestmark = pytest.mark.slow  # JAX model/kernel suite: excluded from the fast lane
+
 KEY = jax.random.PRNGKey(7)
 
 

@@ -11,6 +11,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+pytestmark = pytest.mark.slow  # JAX model/kernel suite: excluded from the fast lane
+
 
 def test_moe_mesh_equals_local_when_no_drops():
     """With generous capacity both paths route identically -> same output."""

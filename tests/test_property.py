@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax
@@ -53,6 +57,7 @@ def test_enforcement_never_exceeds_target_steady_state(target, demand, c):
     assert res.avg_carbon_rate <= max(target, floor) * 1.10 + 0.5
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 4), st.integers(1, 3), st.integers(8, 32),
        st.booleans())
@@ -69,6 +74,7 @@ def test_attention_softmax_rows_sum_to_one(b, hkv, s, causal):
     assert np.abs(np.asarray(out)).max() <= vmax + 1e-4
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 3), st.integers(8, 40), st.integers(4, 16))
 def test_rglru_is_contraction(b, s, w):
@@ -85,6 +91,7 @@ def test_rglru_is_contraction(b, s, w):
     assert np.isfinite(np.asarray(hf)).all()
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_checkpoint_determinism(seed):

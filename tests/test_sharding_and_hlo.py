@@ -10,6 +10,8 @@ from jax.sharding import Mesh
 from repro.launch import hlo_analysis as HLO
 from repro.models.sharding import logical_to_pspec
 
+pytestmark = pytest.mark.slow  # JAX model/kernel suite: excluded from the fast lane
+
 
 def _fake_mesh(shape=(2, 4), axes=("data", "model")):
     devs = np.array([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)

@@ -17,6 +17,8 @@ from repro.train import compression as COMP
 from repro.train import loop as TL
 from repro.train import optimizer as OPT
 
+pytestmark = pytest.mark.slow  # JAX model/kernel suite: excluded from the fast lane
+
 KEY = jax.random.PRNGKey(0)
 
 
