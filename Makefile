@@ -1,9 +1,10 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test bench-fleet bench
+.PHONY: test-fast test bench-fleet bench bench-gate placement
 
-# Fast lane: carbon-core + fleet tests (seconds, no JAX model compiles)
+# Fast lane: carbon-core + fleet + placement tests (seconds, no JAX
+# model compiles)
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
@@ -14,6 +15,24 @@ test:
 # Fleet-vs-scalar sweep speedup entry (the perf trajectory record)
 bench-fleet:
 	$(PY) -m benchmarks.run --only fleet_sweep --fast true
+
+# CI benchmark-regression gate, runnable locally: fleet + placement
+# sweeps in fast mode, JSON report, pinned speedup floors
+bench-gate:
+	$(PY) -m benchmarks.run --only fleet_sweep,placement_sweep \
+		--fast true --json benchmarks/out/ci.json
+	$(PY) -m benchmarks.check_regression benchmarks/out/ci.json \
+		--min fleet_sweep.speedup_x=10 \
+		--max fleet_sweep.parity_max_abs_diff=1e-9 \
+		--min placement_sweep.speedup_x=3 \
+		--max placement_sweep.parity_max_abs_diff=1e-9 \
+		--min placement_sweep.assign_equal=1 \
+		--max placement_sweep.over_capacity_epochs=0
+
+# Multi-region placement demo: heterogeneous fleet migrating between
+# low- and high-variability grids vs the frozen no-migration baseline
+placement:
+	$(PY) examples/simulate_regions.py --placement --fleet 120
 
 bench:
 	$(PY) -m benchmarks.run

@@ -1,0 +1,96 @@
+"""CI benchmark-regression gate.
+
+Reads the JSON report written by ``benchmarks.run --json`` and enforces
+floor/ceiling constraints on its ``derived`` metrics, e.g.::
+
+    python -m benchmarks.check_regression benchmarks/out/ci.json \\
+        --min fleet_sweep.speedup_x=10 \\
+        --min placement_sweep.speedup_x=3 \\
+        --max placement_sweep.parity_max_abs_diff=1e-9
+
+A dotted path ``entry.metric`` resolves through the entry's ``derived``
+dict transparently (booleans coerce to 0/1, so ``--min x.assign_equal=1``
+pins a flag). Exits 1 when any constraint is violated and 2 when a
+referenced entry or metric is missing from the report, so a silently
+skipped benchmark also fails the job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def lookup(report: dict, dotted: str) -> float:
+    node = report
+    for part in dotted.split("."):
+        if isinstance(node, dict) and part in node:
+            node = node[part]
+        elif isinstance(node, dict) and part in node.get("derived", {}):
+            node = node["derived"][part]
+        else:
+            raise KeyError(dotted)
+    return float(node)
+
+
+def parse_constraint(spec: str) -> tuple[str, float]:
+    if "=" not in spec:
+        raise argparse.ArgumentTypeError(f"expected key.path=value, got {spec!r}")
+    path, _, value = spec.partition("=")
+    return path, float(value)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("report", help="JSON written by benchmarks.run --json")
+    ap.add_argument(
+        "--min",
+        action="append",
+        default=[],
+        type=parse_constraint,
+        metavar="PATH=FLOOR",
+        help="fail when metric < floor (repeatable)",
+    )
+    ap.add_argument(
+        "--max",
+        action="append",
+        default=[],
+        type=parse_constraint,
+        metavar="PATH=CEIL",
+        help="fail when metric > ceiling (repeatable)",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.report) as f:
+        report = json.load(f)
+
+    failures = 0
+    for path, floor in args.min:
+        try:
+            value = lookup(report, path)
+        except KeyError:
+            print(f"MISSING {path}: not in {args.report}")
+            return 2
+        ok = value >= floor
+        print(f"{'PASS' if ok else 'FAIL'} {path} = {value:g} (floor {floor:g})")
+        failures += not ok
+    for path, ceil in args.max:
+        try:
+            value = lookup(report, path)
+        except KeyError:
+            print(f"MISSING {path}: not in {args.report}")
+            return 2
+        ok = value <= ceil
+        print(f"{'PASS' if ok else 'FAIL'} {path} = {value:g} (ceiling {ceil:g})")
+        failures += not ok
+
+    if failures:
+        print(f"{failures} benchmark constraint(s) violated")
+        return 1
+    print("all benchmark constraints satisfied")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,7 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus writes full row data to
 benchmarks/out/ as CSV for plotting). Run:
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig1_regions] [--fast true]
+    PYTHONPATH=src python -m benchmarks.run \
+        [--only fleet_sweep,placement_sweep] [--fast true] [--json out.json]
+
+``--only`` takes a comma-separated entry list; ``--json`` additionally
+writes ``{name: {us_per_call, derived}}`` to the given path (the CI
+benchmark-regression gate feeds this to benchmarks.check_regression).
 """
 from __future__ import annotations
 
@@ -50,20 +55,39 @@ def main() -> None:
         # vectorized fleet simulator vs looped simulate() (64x4x3 sweep);
         # fast mode shortens the traces, not the sweep shape
         ("fleet_sweep", figs.fleet_sweep, {"days": 2 if fast else 3}),
+        # multi-region placement planner, scalar reference vs (N, R) batch
+        ("placement_sweep", figs.placement_sweep,
+         {"days": 2 if fast else 3}),
     ]
     only = args.get("only")
+    only_set = set(only.split(",")) if only else None
+    if only_set:
+        known = {name for name, _, _ in entries}
+        unknown = only_set - known
+        if unknown:
+            raise SystemExit(f"unknown benchmark entries {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
 
+    report = {}
     print("name,us_per_call,derived")
     for name, fn, kw in entries:
-        if only and name != only:
+        if only_set and name not in only_set:
             continue
         t0 = time.perf_counter()
         rows, derived = fn(**kw)
         us = (time.perf_counter() - t0) * 1e6
         _rows_to_csv(name, rows)
+        report[name] = {"us_per_call": us, "derived": derived}
         compact = json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
                               for k, v in derived.items()}, default=str)
         print(f"{name},{us:.0f},{compact}")
+    if "json" in args:
+        out_path = args["json"]
+        d = os.path.dirname(out_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2, default=str)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,10 @@
-"""Slice family + migration cost models (the server-catalog substrate)."""
+"""Slice family, migration cost model and multi-region placement (the
+server-catalog substrate)."""
 from repro.cluster.slices import Slice, SliceFamily, paper_family, tpu_v5e_family
 from repro.cluster.migration import MigrationCostModel
+from repro.cluster.placement import (PlacementConfig, PlacementEngine,
+                                     PlacementPlan, PlacementResult)
 
 __all__ = ["Slice", "SliceFamily", "paper_family", "tpu_v5e_family",
-           "MigrationCostModel"]
+           "MigrationCostModel", "PlacementConfig", "PlacementEngine",
+           "PlacementPlan", "PlacementResult"]

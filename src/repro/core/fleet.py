@@ -47,7 +47,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.cluster.migration import MigrationCostModel
-from repro.cluster.slices import FamilyTables, SliceFamily
+from repro.cluster.slices import SliceFamily
 from repro.core.policy import (K_MIGRATE, K_RESUME, K_STAY, K_SUSPEND,
                                _budget_batch)
 from repro.core.simulator import SimConfig, SimResult
@@ -533,11 +533,23 @@ class BlockPolicy:
 def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                            carbon, targets: Sequence[float],
                            cfg_base: SimConfig,
-                           demand_scale: float = 1.0) -> list:
+                           demand_scale: float = 1.0,
+                           placement=None) -> list:
     """Fleet-backed `sweep_population`: batches every (policy x target x
     trace) combination into ONE FleetSimulator.run call (policy-major
     column blocks via BlockPolicy) and emits the same aggregate rows, in
-    the same order, as the scalar backend."""
+    the same order, as the scalar backend.
+
+    With `placement` (a `repro.cluster.placement.PlacementEngine`), each
+    trace column is first assigned a region per epoch by the placement
+    layer — the plan is computed once on the real n_tr-column fleet (so
+    engine capacity applies to the actual containers, not a
+    target-duplicated copy) and shared by every (policy, target) block,
+    so all combinations are compared under the same region schedule —
+    and the planned per-container carbon matrix replaces `carbon`. Rows
+    then also carry `placement_migrations_mean` and
+    `placement_overhead_g_mean`.
+    """
     traces = [np.asarray(tr, dtype=np.float64) for tr in traces]
     lengths = {len(tr) for tr in traces}
     if len(lengths) != 1:
@@ -546,8 +558,24 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
     n_tr = len(traces)
     n_tg = len(targets)
     per_pol = n_tr * n_tg
-    demand_one = np.tile(np.stack(traces, axis=1), (1, n_tg))  # (T, per_pol)
+    stack = np.stack(traces, axis=1)                   # (T, n_tr)
+    demand_one = np.tile(stack, (1, n_tg))             # (T, per_pol)
     tgt_one = np.repeat(np.asarray(targets, dtype=np.float64), n_tr)
+
+    plan = None
+    if placement is not None:
+        if float(placement.interval_s) != float(cfg_base.interval_s):
+            raise ValueError(
+                f"placement engine plans on interval_s="
+                f"{placement.interval_s} but the sweep simulates at "
+                f"interval_s={cfg_base.interval_s}; construct the engine "
+                f"with the sweep's interval")
+        demand_plan = stack
+        if demand_scale is not None and np.any(
+                np.asarray(demand_scale) != 1.0):
+            demand_plan = stack * demand_scale
+        plan = placement.plan(demand_plan, state_gb=cfg_base.state_gb)
+        carbon = np.tile(plan.carbon_matrix(), (1, n_tg))  # (T, per_pol)
 
     sim = FleetSimulator(family, interval_s=cfg_base.interval_s,
                          suspend_releases_slice=cfg_base.suspend_releases_slice)
@@ -574,7 +602,11 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                   for p, (_, pol) in enumerate(loop_pols)]
         demand = np.tile(demand_one, (1, len(loop_pols)))
         tgt_vec = np.tile(tgt_one, len(loop_pols))
-        res = sim.run(BlockPolicy(blocks), demand, carbon, tgt_vec, **run_kw)
+        carbon_blk = carbon
+        if isinstance(carbon, np.ndarray) and carbon.ndim == 2:
+            carbon_blk = np.tile(carbon, (1, len(loop_pols)))
+        res = sim.run(BlockPolicy(blocks), demand, carbon_blk, tgt_vec,
+                      **run_kw)
         for p, (name, _) in enumerate(loop_pols):
             results[name] = (res, p * per_pol)
 
@@ -594,7 +626,7 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
             for i in idx:
                 for k, v in res.time_on_slice(i).items():
                     slice_time[k] = slice_time.get(k, 0.0) + v / n_tr
-            rows.append({
+            row = {
                 "policy": name, "target": target,
                 "carbon_rate_mean": float(np.mean(rates)),
                 "carbon_rate_std": float(np.std(rates)),
@@ -603,5 +635,12 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                 "migrations_mean": float(np.mean(migs)),
                 "suspended_frac_mean": float(np.mean(susp)),
                 "time_on_slice": slice_time,
-            })
+            }
+            if plan is not None:
+                # one shared n_tr-column plan: identical per target
+                row["placement_migrations_mean"] = float(
+                    np.mean(plan.migrations))
+                row["placement_overhead_g_mean"] = float(
+                    np.mean(plan.overhead_g))
+            rows.append(row)
     return rows

@@ -7,7 +7,7 @@ powered during a stop-and-copy, no work served).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
@@ -190,18 +190,27 @@ def _record(series, cfg, t, rate, st, util, demand, served):
 def sweep_population(policies: dict, family: SliceFamily, traces, carbon,
                      targets: Sequence[float], cfg_base: SimConfig,
                      demand_scale: float = 1.0,
-                     backend: str = "scalar") -> list:
+                     backend: str = "scalar",
+                     placement=None) -> list:
     """Returns rows: {policy, target, mean/std of carbon rate + throttle}.
 
     `backend="fleet"` batches all (target x trace) pairs per policy through
     the vectorized `repro.core.fleet.FleetSimulator` — same rows, same
     order, ~20-100x faster on population-scale sweeps.
+
+    `placement` (fleet backend only) is a
+    `repro.cluster.placement.PlacementEngine`: every trace column is then
+    assigned a region per epoch by the placement layer and `carbon` is
+    ignored in favour of the planned per-container carbon matrix.
     """
     if backend == "fleet":
         from repro.core.fleet import sweep_population_fleet
         return sweep_population_fleet(policies, family, traces, carbon,
                                       targets, cfg_base,
-                                      demand_scale=demand_scale)
+                                      demand_scale=demand_scale,
+                                      placement=placement)
+    if placement is not None:
+        raise ValueError("placement requires backend='fleet'")
     if backend != "scalar":
         raise ValueError(f"unknown sweep backend {backend!r}")
     rows = []

@@ -21,15 +21,14 @@ import time
 from typing import Optional
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.config import (DECODE, ENCDEC, HYBRID, PREFILL, TRAIN,
-                          OptimizerConfig, ShapeConfig, SHAPES, TrainConfig)
+                          OptimizerConfig, SHAPES, TrainConfig)
 from repro.configs import get_arch
 from repro.launch import hlo_analysis as HLO
 from repro.launch.mesh import make_production_mesh
 from repro.models.api import get_model
-from repro.models.params import abstract_params, param_shardings
 from repro.models.sharding import logical_to_pspec, rules_ctx
 from repro.train import loop as TL
 

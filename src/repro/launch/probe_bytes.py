@@ -9,9 +9,10 @@ roofline term: matmul/projection bytes exact; attention HBM traffic is the
 flash kernel's O(q+k+v+o) (its internal block loops are counted once, which
 matches a kernel that streams blocks through VMEM).
 """
-import json, sys, traceback
+import json
+import sys
+import traceback
 
-from repro.config import SHAPES
 from repro.configs.registry import all_cells
 from repro.launch import dryrun_lib as DL
 from repro.launch.dryrun import DEFAULT_SAVE

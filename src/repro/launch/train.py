@@ -8,7 +8,6 @@ enforcement: duty-cycling + elastic slice migration + suspend/resume).
 """
 from __future__ import annotations
 
-import os
 import sys
 import tempfile
 

@@ -12,7 +12,7 @@ the serve engine, the dry-run launcher, and the benchmarks:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,6 @@ required for the 200k/256k-vocab archs at train_4k scale.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.config import OptimizerConfig, TrainConfig
 from repro.models.api import Model
-from repro.models.params import ParamSpec, abstract_params, init_params, is_spec, param_pspecs
+from repro.models.params import ParamSpec, abstract_params, is_spec, param_pspecs
 from repro.train import compression as COMP
 from repro.train import optimizer as OPT
 

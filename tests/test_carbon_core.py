@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.carbon.intensity import ConstantProvider, TraceProvider
-from repro.carbon.regions import REGIONS, tier_means, tier_of
+from repro.carbon.regions import REGIONS, tier_means
 from repro.carbon.traces import synth_trace, trace_cov
 from repro.cluster.migration import MigrationCostModel
 from repro.cluster.slices import paper_family, tpu_v5e_family

@@ -1,6 +1,5 @@
 """MoE shard_map-vs-local equivalence, the carbon-aware trainer loop, and
 the serve scheduler's carbon coupling."""
-import os
 
 import dataclasses
 import tempfile
@@ -9,7 +8,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 
 pytestmark = pytest.mark.slow  # JAX model/kernel suite: excluded from the fast lane
 

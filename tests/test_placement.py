@@ -1,0 +1,399 @@
+"""Multi-region placement layer: scalar-reference parity, capacity and
+hysteresis invariants, and MigrationCostModel edge cases.
+
+The parity tests mirror the fleet suite's contract: the vectorized
+(N, R) planner in `PlacementEngine.plan` must agree with the greedy
+pure-Python reference `plan_scalar` to 1e-9 (in practice bit-for-bit) on
+every field of the plan — epoch-by-epoch assignments, migration counts,
+stop-and-copy overhead and downtime — across capacity regimes,
+heterogeneous state sizes, and custom initial assignments.
+"""
+import numpy as np
+import pytest
+
+from repro.carbon.intensity import TraceProvider
+from repro.cluster.migration import MigrationCostModel
+from repro.cluster.placement import PlacementConfig, PlacementEngine
+from repro.cluster.slices import paper_family
+from repro.core.policy import CarbonContainerPolicy, SuspendResumePolicy
+from repro.core.simulator import SimConfig, sweep_population
+from repro.workload.azure_like import sample_population
+
+REGIONS = ("PL", "NL", "CAISO")
+
+
+def _providers(days=2, seed=1):
+    return [TraceProvider.for_region(r, hours=24 * days, seed=seed)
+            for r in REGIONS]
+
+
+def _demand(n, days=2, seed=2):
+    traces = [t.util for t in sample_population(n, days=days, seed=seed)]
+    return np.stack(traces, axis=1)
+
+
+def _assert_plans_equal(pv, ps, tol=1e-9, ctx=""):
+    assert (pv.assign == ps.assign).all(), f"{ctx}: assignments diverge"
+    assert (pv.migrations == ps.migrations).all(), f"{ctx}: migrations"
+    assert np.abs(pv.overhead_g - ps.overhead_g).max() <= tol, \
+        f"{ctx}: overhead_g"
+    assert np.abs(pv.downtime_s - ps.downtime_s).max() <= tol, \
+        f"{ctx}: downtime_s"
+
+
+# ---------------------------------------------------------------------------
+# Scalar-reference parity
+# ---------------------------------------------------------------------------
+
+CONFIGS = [
+    PlacementConfig(),                                        # uncapped
+    PlacementConfig(capacity=None, min_dwell=1, hysteresis=0.0),
+    PlacementConfig(capacity=None, horizon_intervals=3, hysteresis=0.5),
+]
+
+
+@pytest.mark.parametrize("cfg", CONFIGS,
+                         ids=["default", "eager", "short-horizon"])
+def test_plan_matches_scalar_uncapped(cfg):
+    eng = PlacementEngine(paper_family(), _providers(), config=cfg,
+                          region_names=REGIONS)
+    demand = _demand(24)
+    pv = eng.plan(demand)
+    ps = eng.plan_scalar(demand)
+    _assert_plans_equal(pv, ps, ctx=str(cfg))
+    assert pv.migrations.sum() > 0      # decisions actually exercised
+
+
+@pytest.mark.parametrize("cap", [1, 2, 5, 40])
+def test_plan_matches_scalar_capacitated(cap):
+    """Tight caps force preference-round fall-through; parity must hold
+    through denial/strike rounds, not just the happy path."""
+    n = min(cap * len(REGIONS), 30)
+    cfg = PlacementConfig(capacity=cap, min_dwell=2, hysteresis=0.05)
+    eng = PlacementEngine(paper_family(), _providers(), config=cfg,
+                          region_names=REGIONS)
+    demand = _demand(n)
+    pv = eng.plan(demand)
+    ps = eng.plan_scalar(demand)
+    _assert_plans_equal(pv, ps, ctx=f"cap={cap}")
+    occ = pv.occupancy()
+    assert (occ <= cap).all()
+
+
+def test_plan_matches_scalar_heterogeneous_state_and_initial():
+    n = 18
+    rng = np.random.default_rng(7)
+    state_gb = rng.choice([0.0, 0.25, 1.0, 4.0], size=n)
+    initial = rng.integers(0, len(REGIONS), size=n)
+    cfg = PlacementConfig(capacity=n, min_dwell=3)
+    eng = PlacementEngine(paper_family(), _providers(), config=cfg,
+                          region_names=REGIONS)
+    demand = _demand(n)
+    pv = eng.plan(demand, state_gb=state_gb, initial=initial)
+    ps = eng.plan_scalar(demand, state_gb=state_gb, initial=initial)
+    _assert_plans_equal(pv, ps, ctx="hetero")
+    assert (pv.assign[0] != initial).any() or pv.migrations.sum() == 0
+
+
+def test_plan_matches_scalar_single_region_and_matrix_input():
+    """R=1 degenerates to no-op placement; a raw (T, R) matrix is accepted
+    in place of providers."""
+    T, n = 96, 8
+    demand = _demand(n)[:T]
+    one = PlacementEngine(paper_family(),
+                          np.full((T, 1), 300.0), region_names=("only",))
+    pv, ps = one.plan(demand), one.plan_scalar(demand)
+    _assert_plans_equal(pv, ps, ctx="R=1")
+    assert pv.migrations.sum() == 0 and (pv.assign == 0).all()
+
+    tvec = np.arange(T) * 300.0
+    cmat = np.stack([p.intensity_series(tvec) for p in _providers()], axis=1)
+    eng = PlacementEngine(paper_family(), cmat, region_names=REGIONS)
+    _assert_plans_equal(eng.plan(demand), eng.plan_scalar(demand),
+                        ctx="matrix input")
+
+
+# ---------------------------------------------------------------------------
+# Capacity and hysteresis invariants
+# ---------------------------------------------------------------------------
+
+def test_no_region_ever_over_capacity():
+    n, cap = 30, 12
+    cfg = PlacementConfig(capacity=cap, min_dwell=1, hysteresis=0.0)
+    eng = PlacementEngine(paper_family(), _providers(days=3), config=cfg,
+                          region_names=REGIONS)
+    plan = eng.plan(_demand(n, days=3))
+    occ = plan.occupancy()
+    assert (occ <= cap).all()
+    assert (occ.sum(axis=1) == n).all()   # every container placed somewhere
+
+
+def test_per_region_capacity_vector():
+    """Uneven capacity vector with the *default* initial assignment:
+    the capacity-aware round-robin fill must stay feasible."""
+    cap = np.array([1, 2, 30])
+    cfg = PlacementConfig(capacity=cap, min_dwell=1)
+    eng = PlacementEngine(paper_family(), _providers(), config=cfg,
+                          region_names=REGIONS)
+    demand = _demand(12)
+    plan = eng.plan(demand)
+    _assert_plans_equal(plan, eng.plan_scalar(demand), ctx="cap vector")
+    assert (plan.occupancy() <= cap[None, :]).all()
+    # round-robin fill interleaves regions, skipping full ones:
+    # 0,1,2, 1,2, 2,2,... for caps (1, 2, 30) and 12 containers
+    occ0 = np.bincount(plan.assign[0], minlength=3)
+    assert (occ0 <= cap).all() and occ0.sum() == 12
+
+
+def test_no_oscillation_on_flat_traces():
+    """Identical constant intensity everywhere: no move ever pays for its
+    stop-and-copy cost, so a converged fleet must not oscillate."""
+    T, n = 240, 10
+    eng = PlacementEngine(paper_family(), np.full((T, 3), 350.0),
+                          config=PlacementConfig(min_dwell=1,
+                                                 hysteresis=0.0))
+    plan = eng.plan(_demand(n)[:T])
+    assert plan.migrations.sum() == 0
+    assert (plan.assign == plan.assign[0][None, :]).all()
+
+
+def test_dwell_pins_containers_between_moves():
+    """No container moves twice within min_dwell epochs of a move."""
+    cfg = PlacementConfig(min_dwell=6, hysteresis=0.0)
+    eng = PlacementEngine(paper_family(), _providers(days=3), config=cfg,
+                          region_names=REGIONS)
+    plan = eng.plan(_demand(16, days=3))
+    moves = plan.assign[1:] != plan.assign[:-1]    # (T-1, N)
+    for i in range(moves.shape[1]):
+        epochs = np.flatnonzero(moves[:, i])
+        if len(epochs) > 1:
+            assert np.diff(epochs).min() >= cfg.min_dwell
+    assert plan.migrations.sum() > 0
+
+
+def test_hysteresis_suppresses_marginal_moves():
+    """Raising hysteresis can only reduce the number of placement moves."""
+    demand = _demand(20)
+    counts = []
+    for h in (0.0, 0.5, 5.0, 1e9):
+        eng = PlacementEngine(
+            paper_family(), _providers(), region_names=REGIONS,
+            config=PlacementConfig(hysteresis=h, min_dwell=1))
+        counts.append(int(eng.plan(demand).migrations.sum()))
+    assert counts == sorted(counts, reverse=True)
+    assert counts[-1] == 0            # infinite hysteresis freezes the fleet
+
+
+def test_carbon_matrix_gathers_assigned_regions():
+    eng = PlacementEngine(paper_family(), _providers(), region_names=REGIONS)
+    plan = eng.plan(_demand(9))
+    cm = plan.carbon_matrix()
+    T, N = plan.assign.shape
+    for n in range(0, T, 37):
+        for i in range(N):
+            assert cm[n, i] == plan.region_intensity[n, plan.assign[n, i]]
+
+
+# ---------------------------------------------------------------------------
+# Placed fleet runs + sweep integration
+# ---------------------------------------------------------------------------
+
+def test_run_compare_static_populates_saving():
+    n = 12
+    eng = PlacementEngine(
+        paper_family(), _providers(), region_names=REGIONS,
+        config=PlacementConfig(capacity=n))
+    demand = _demand(n)
+    res = eng.run(CarbonContainerPolicy("energy"), demand, targets=45.0,
+                  compare_static=True)
+    assert res.static_fleet is not None
+    assert np.isfinite(res.saving_vs_static_pct)
+    assert (res.total_emissions_g
+            >= res.fleet.emissions_g - 1e-12).all()
+    assert (res.carbon_efficiency > 0.0).all()
+
+    res2 = eng.run(SuspendResumePolicy(), demand, targets=45.0)
+    with pytest.raises(ValueError):
+        _ = res2.saving_vs_static_pct
+
+
+def test_sweep_population_accepts_placement():
+    fam = paper_family()
+    days = 2
+    traces = [t.util for t in sample_population(3, days=days, seed=4)]
+    carbon = TraceProvider.for_region("CAISO", hours=24 * days, seed=1)
+    pols = {"cc": lambda: CarbonContainerPolicy("energy"),
+            "sr": SuspendResumePolicy}
+    targets = [30.0, 60.0]
+    eng = PlacementEngine(fam, _providers(days=days), region_names=REGIONS)
+    rows = sweep_population(pols, fam, traces, carbon, targets,
+                            SimConfig(target_rate=0.0), backend="fleet",
+                            placement=eng)
+    assert len(rows) == len(pols) * len(targets)
+    for row in rows:
+        assert "placement_migrations_mean" in row
+        assert row["placement_overhead_g_mean"] >= 0.0
+
+    with pytest.raises(ValueError):
+        sweep_population(pols, fam, traces, carbon, targets,
+                         SimConfig(target_rate=0.0), backend="scalar",
+                         placement=eng)
+
+    eng_1h = PlacementEngine(fam, _providers(days=days), interval_s=3600.0,
+                             region_names=REGIONS)
+    with pytest.raises(ValueError):     # engine/sweep interval mismatch
+        sweep_population(pols, fam, traces, carbon, targets,
+                         SimConfig(target_rate=0.0, interval_s=300.0),
+                         backend="fleet", placement=eng_1h)
+
+
+def test_sweep_placement_capacity_applies_to_real_fleet():
+    """The sweep plans once over the n_tr real containers: a capacity
+    that exactly fits the fleet must work regardless of how many targets
+    duplicate the demand columns, and every target sees the same plan."""
+    fam = paper_family()
+    days = 2
+    n_tr = 6
+    traces = [t.util for t in sample_population(n_tr, days=days, seed=4)]
+    carbon = TraceProvider.for_region("CAISO", hours=24 * days, seed=1)
+    eng = PlacementEngine(fam, _providers(days=days), region_names=REGIONS,
+                          config=PlacementConfig(capacity=2))  # 3*2 == n_tr
+    rows = sweep_population({"cc": lambda: CarbonContainerPolicy("energy")},
+                            fam, traces, carbon, [30.0, 60.0, 90.0],
+                            SimConfig(target_rate=0.0), backend="fleet",
+                            placement=eng)
+    assert len(rows) == 3
+    migs = {row["placement_migrations_mean"] for row in rows}
+    assert len(migs) == 1               # one shared plan across targets
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+def test_placement_input_validation():
+    fam = paper_family()
+    provs = _providers()
+    eng = PlacementEngine(fam, provs, region_names=REGIONS)
+    with pytest.raises(ValueError):
+        eng.plan(np.array([[0.5], [-0.1]]))              # negative demand
+    with pytest.raises(ValueError):
+        eng.plan(np.ones((4, 2, 2)))                     # bad rank
+    with pytest.raises(ValueError):
+        eng.plan(np.ones((4, 2)), initial=np.array([0, 9]))  # bad region
+    with pytest.raises(ValueError):
+        eng.plan(np.ones((4, 2)), initial=np.array([0]))     # bad shape
+    with pytest.raises(ValueError):
+        PlacementEngine(fam, provs, region_names=("a",))     # name mismatch
+    with pytest.raises(ValueError):
+        PlacementEngine(fam, [])                             # no regions
+    with pytest.raises(ValueError):
+        PlacementEngine(fam, np.full((4, 2), 100.0),
+                        region_names=REGIONS).plan(np.ones((4, 2)))
+    with pytest.raises(ValueError):                      # matrix too short
+        PlacementEngine(fam, np.full((4, 3), 100.0),
+                        region_names=REGIONS).plan(np.ones((8, 2)))
+
+
+def test_capacity_validation():
+    fam = paper_family()
+    provs = _providers()
+    with pytest.raises(ValueError):                      # cap must be >= 1
+        PlacementEngine(fam, provs,
+                        config=PlacementConfig(capacity=0)).plan(
+                            np.ones((4, 2)))
+    with pytest.raises(ValueError):                      # fractional cap
+        PlacementEngine(fam, provs,
+                        config=PlacementConfig(capacity=2.7)).plan(
+                            np.ones((4, 2)))
+    cfg = PlacementConfig(capacity=1)
+    eng = PlacementEngine(fam, provs, config=cfg)
+    with pytest.raises(ValueError):                      # total cap < N
+        eng.plan(np.ones((4, 9)))
+    with pytest.raises(ValueError):                      # initial over cap
+        eng.plan(np.ones((4, 2)), initial=np.array([0, 0]))
+
+
+def test_run_accepts_precomputed_plan():
+    """run(plan=...) reuses the plan instead of re-planning, and rejects
+    a plan whose shape does not match the demand."""
+    eng = PlacementEngine(paper_family(), _providers(), region_names=REGIONS)
+    demand = _demand(6)
+    plan = eng.plan(demand)
+    res = eng.run(CarbonContainerPolicy("energy"), demand, targets=45.0,
+                  plan=plan, compare_static=True)
+    assert res.plan is plan
+    res2 = eng.run(CarbonContainerPolicy("energy"), demand, targets=45.0,
+                   compare_static=True)
+    assert np.allclose(res.total_emissions_g, res2.total_emissions_g)
+    assert np.allclose(res.static_fleet.emissions_g,
+                       res2.static_fleet.emissions_g)
+    with pytest.raises(ValueError):
+        eng.run(CarbonContainerPolicy("energy"), demand[:, :3],
+                targets=45.0, plan=plan)
+
+
+def test_static_baseline_uses_plans_initial_assignment():
+    """compare_static with a precomputed plan must freeze the fleet on
+    the initial assignment the plan was built from, not a default."""
+    eng = PlacementEngine(paper_family(), _providers(), region_names=REGIONS)
+    demand = _demand(6)
+    init = np.full(6, 2)                 # everyone starts in CAISO
+    plan = eng.plan(demand, initial=init)
+    assert (plan.initial == init).all()
+    res_reused = eng.run(CarbonContainerPolicy("energy"), demand,
+                         targets=45.0, plan=plan, compare_static=True)
+    res_direct = eng.run(CarbonContainerPolicy("energy"), demand,
+                         targets=45.0, initial=init, compare_static=True)
+    assert np.allclose(res_reused.static_fleet.emissions_g,
+                       res_direct.static_fleet.emissions_g)
+    assert res_reused.saving_vs_static_pct == pytest.approx(
+        res_direct.saving_vs_static_pct)
+
+
+# ---------------------------------------------------------------------------
+# MigrationCostModel edge cases
+# ---------------------------------------------------------------------------
+
+def test_migration_zero_state_size():
+    """Zero-footprint state still pays the suspend/resume base latency."""
+    m = MigrationCostModel()
+    t0 = m.stop_and_copy_time(0.0)
+    assert t0 == pytest.approx(m.suspend_base_s + m.resume_base_s
+                               + m.restore_extra_s)
+    assert t0 > 0.0
+    tb = m.stop_and_copy_time_batch(np.zeros(3), np.array([0.0, 1.0, 10.0]))
+    assert np.allclose(tb, t0, atol=1e-12)
+    assert m.suspend_time(0.0) == m.suspend_base_s
+    assert m.resume_time(0.0) == m.resume_base_s
+
+
+def test_migration_bandwidth_limits():
+    m = MigrationCostModel()
+    # zero bandwidth falls back to the model default in both paths
+    assert m.stop_and_copy_time(2.0, transfer_gbps=0.0) == \
+        pytest.approx(m.stop_and_copy_time(2.0,
+                                           transfer_gbps=m.transfer_gbps))
+    tb = m.stop_and_copy_time_batch(np.full(2, 2.0), np.array([0.0, 1.0]))
+    assert tb[0] == pytest.approx(tb[1])
+    # downtime is monotone non-increasing in bandwidth...
+    bws = np.array([0.01, 0.1, 1.0, 100.0])
+    times = m.stop_and_copy_time_batch(np.full(4, 4.0), bws)
+    assert (np.diff(times) <= 1e-12).all()
+    # ...and floors at the bandwidth-independent suspend+compress terms
+    floor = (m.suspend_time(4.0) + m.resume_time(4.0)
+             + (m.compress_per_gb_s + m.decompress_per_gb_s) * 4.0
+             + m.restore_extra_s)
+    assert times[-1] == pytest.approx(floor, rel=1e-3)
+    assert (times >= floor - 1e-12).all()
+
+
+def test_migration_batch_matches_scalar_compressed():
+    m = MigrationCostModel()
+    sgb = np.array([0.0, 0.25, 1.0, 7.0])
+    bw = np.array([0.0, 0.25, 1.0, 2.5])
+    batch = m.stop_and_copy_time_batch(sgb, bw)
+    for i in range(len(sgb)):
+        assert batch[i] == pytest.approx(
+            m.stop_and_copy_time(float(sgb[i]),
+                                 transfer_gbps=float(bw[i])), abs=1e-12)

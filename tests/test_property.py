@@ -7,7 +7,6 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 import jax
-import jax.numpy as jnp
 
 from repro.carbon.intensity import ConstantProvider
 from repro.cluster.slices import paper_family

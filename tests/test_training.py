@@ -1,6 +1,5 @@
 """Training stack: optimizer math, grad accumulation, checkpoint round-trip
 with resharding, compression error feedback, and loss-decrease integration."""
-import os
 import tempfile
 
 import jax
@@ -10,7 +9,7 @@ import pytest
 
 from repro.config import OptimizerConfig, TrainConfig
 from repro.configs import get_arch
-from repro.data.pipeline import SyntheticLM, markov_stream
+from repro.data.pipeline import markov_stream
 from repro.models import get_model
 from repro.train import checkpoint as CKPT
 from repro.train import compression as COMP
