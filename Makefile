@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test bench-fleet bench bench-gate placement
+.PHONY: test-fast test bench-fleet bench bench-gate placement jax-sweep
 
 # Fast lane: carbon-core + fleet + placement tests (seconds, no JAX
 # model compiles)
@@ -17,9 +17,13 @@ bench-fleet:
 	$(PY) -m benchmarks.run --only fleet_sweep --fast true
 
 # CI benchmark-regression gate, runnable locally: fleet + placement
-# sweeps in fast mode, JSON report, pinned speedup floors
+# sweeps (scalar vs NumPy, NumPy vs JAX) in fast mode, JSON report,
+# pinned speedup floors + parity ceilings. The jax floors use
+# steady-state timings only (jit compile is reported separately as
+# warmup_s, never gated).
 bench-gate:
-	$(PY) -m benchmarks.run --only fleet_sweep,placement_sweep \
+	$(PY) -m benchmarks.run \
+		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax \
 		--fast true --json benchmarks/out/ci.json
 	$(PY) -m benchmarks.check_regression benchmarks/out/ci.json \
 		--min fleet_sweep.speedup_x=10 \
@@ -27,12 +31,22 @@ bench-gate:
 		--min placement_sweep.speedup_x=3 \
 		--max placement_sweep.parity_max_abs_diff=1e-9 \
 		--min placement_sweep.assign_equal=1 \
-		--max placement_sweep.over_capacity_epochs=0
+		--max placement_sweep.over_capacity_epochs=0 \
+		--min fleet_sweep_jax.speedup_x=2.5 \
+		--max fleet_sweep_jax.parity_max_abs_diff=1e-6 \
+		--min placement_sweep_jax.speedup_x=1.2 \
+		--max placement_sweep_jax.parity_max_abs_diff=1e-6 \
+		--min placement_sweep_jax.assign_equal=1 \
+		--max placement_sweep_jax.over_capacity_epochs=0
 
 # Multi-region placement demo: heterogeneous fleet migrating between
 # low- and high-variability grids vs the frozen no-migration baseline
 placement:
 	$(PY) examples/simulate_regions.py --placement --fleet 120
+
+# Device-resident JAX sweep over a 10k-container placed fleet
+jax-sweep:
+	$(PY) examples/simulate_regions.py --jax-sweep
 
 bench:
 	$(PY) -m benchmarks.run

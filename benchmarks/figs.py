@@ -288,6 +288,15 @@ def fleet_sweep(n_traces: int = 64, n_targets: int = 4, days: int = 3):
     Headline numbers: `speedup_x` (wall-clock, best-of-N each) and
     `parity_max_abs_diff` (row-level agreement between backends; the fleet
     path is bit-compatible, so this is expected to be 0.0).
+
+    Notes — `FleetSimulator._loop` temporary preallocation (PR 5): the
+    `_LoopScratch` buffers took the CC-energy fleet run at T=576 from
+    ~0.77s to ~0.70s at N=5040 (~6-8%) and were neutral at N=420
+    (best-of-4, alternated A/B on an otherwise idle 2-vCPU host). NumPy's
+    small-block cache already amortizes most temporary allocation: only
+    single-pass ufunc-`out=` rewrites pay, `np.take(..., out=)` needs
+    mode="clip" to match fancy indexing's fast path, and splitting a
+    `np.where` into fill+masked-copy regressed ~8% and was reverted.
     """
     from repro.carbon.intensity import TraceProvider
     from repro.cluster.slices import paper_family
@@ -405,6 +414,166 @@ def placement_sweep(n_containers: int = 192, days: int = 3):
         "saving_vs_static_pct": res.saving_vs_static_pct,
         **{f"occ_end_{name}": int(occ[-1, r])
            for r, name in enumerate(regions)},
+    }
+    return rows, derived
+
+
+# ---------------------------------------------------------------------------
+# fleet_sweep_jax / placement_sweep_jax: the jit/scan device-resident JAX
+# backend vs the NumPy fleet/placement kernels (perf record; compile time
+# is reported separately from steady state so regression floors never see
+# it)
+# ---------------------------------------------------------------------------
+
+def _steady_vs_numpy(jax_fn, numpy_fn, reps: int = 8):
+    """Warm the jax side once (timed: includes jit compile), then
+    interleave steady-state reps against the NumPy side so host load
+    drift hits both alike. Returns (jax_out, warmup_s, steady_s,
+    numpy_out, numpy_s)."""
+    t0 = time.perf_counter()
+    jax_out = jax_fn()
+    warmup_s = time.perf_counter() - t0
+    steady_s = numpy_s = float("inf")
+    numpy_out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax_out = jax_fn()
+        steady_s = min(steady_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        numpy_out = numpy_fn()
+        numpy_s = min(numpy_s, time.perf_counter() - t0)
+    return jax_out, warmup_s, steady_s, numpy_out, numpy_s
+
+
+def fleet_sweep_jax(n_traces: int = 420, n_targets: int = 12,
+                    days: int = 3):
+    """Carbon Containers (energy) sweep over n_traces x n_targets =
+    5040 containers with mixed-region stacked carbon traces: NumPy fleet
+    backend vs the jit/scan JAX backend (`sweep_population` both ways).
+
+    Headline numbers: `speedup_x` = fleet_s / steady_s (steady state:
+    best-of interleaved reps after the warmup call), `warmup_s` (first
+    call, includes jit compile — reported separately so it never
+    pollutes regression floors), and `parity_max_abs_diff` across all
+    aggregate row metrics (ceiling 1e-6; the NumPy backend itself stays
+    pinned to the scalar loop at 1e-9, anchoring the chain).
+
+    Requires jax; the CPU-tuned XLA flags (legacy runtime + 4 host
+    devices for container-sharding) are set by benchmarks/run.py before
+    jax initializes.
+    """
+    import jax
+    from repro.carbon.intensity import TraceProvider
+    from repro.cluster.slices import paper_family
+    from repro.core.policy import CarbonContainerPolicy
+    from repro.core.simulator import SimConfig, sweep_population
+    from repro.workload.azure_like import sample_population
+
+    fam = paper_family()
+    regions = ("PL", "NL", "CAISO")
+    provs = [TraceProvider.for_region(r, hours=24 * days, seed=1)
+             for r in regions]
+    traces = [t.util for t in sample_population(n_traces, days=days,
+                                                seed=2)]
+    T = len(traces[0])
+    tvec = np.arange(T) * 300.0
+    region_mat = np.stack([p.intensity_series(tvec) for p in provs], axis=1)
+    # container i lives in region i % R: a (T, n_traces) stacked-trace
+    # matrix, tiled across the target axis like the demand matrix
+    cmat_tr = region_mat[:, np.arange(n_traces) % len(regions)]
+    carbon = np.tile(cmat_tr, (1, n_targets))
+    targets = list(np.linspace(20.0, 80.0, n_targets))
+    policies = {"carbon_containers":
+                lambda: CarbonContainerPolicy(variant="energy")}
+    cfg = SimConfig(target_rate=0.0)
+
+    def _backend(backend):
+        return lambda: sweep_population(policies, fam, traces, carbon,
+                                        targets, cfg, backend=backend)
+
+    rows_jax, warmup_s, steady_s, rows_fleet, fleet_s = _steady_vs_numpy(
+        _backend("jax"), _backend("fleet"))
+    keys = ("carbon_rate_mean", "carbon_rate_std", "throttle_mean",
+            "throttle_std", "migrations_mean", "suspended_frac_mean")
+    parity = max(abs(a[k] - b[k])
+                 for a, b in zip(rows_fleet, rows_jax) for k in keys)
+    rows = [{"backend": b, "wall_s": s, **{k: r[k]
+             for k in ("policy", "target") + keys}}
+            for b, s, rws in (("fleet", fleet_s, rows_fleet),
+                              ("jax", steady_s, rows_jax))
+            for r in rws]
+    n_containers = n_traces * n_targets
+    derived = {
+        "n_containers": n_containers,
+        "n_epochs": T,
+        "n_devices": len(jax.devices()),
+        "fleet_s": fleet_s,
+        "warmup_s": warmup_s,
+        "steady_s": steady_s,
+        "speedup_x": fleet_s / steady_s,
+        "parity_max_abs_diff": parity,
+        "speedup_ge_5x": fleet_s / steady_s >= 5.0,
+    }
+    return rows, derived
+
+
+def placement_sweep_jax(n_containers: int = 2000, days: int = 3):
+    """Multi-region placement planner at fleet scale: NumPy (N, R) batch
+    kernel vs the jit/scan JAX planner (`plan_jax`), heterogeneous state
+    sizes, per-region capacity.
+
+    Headline numbers: `speedup_x` = numpy_s / steady_s (compile time in
+    `warmup_s`, reported separately), `assign_equal` (epoch-by-epoch
+    region assignments identical), `parity_max_abs_diff` on
+    overhead/downtime/migrations (ceiling 1e-6; the NumPy planner stays
+    bit-compatible with the greedy scalar reference), and
+    `over_capacity_epochs` (must be 0).
+    """
+    from repro.carbon.intensity import TraceProvider
+    from repro.cluster.placement import PlacementConfig, PlacementEngine
+    from repro.cluster.placement_jax import plan_jax
+    from repro.cluster.slices import paper_family
+    from repro.workload.azure_like import sample_population
+
+    fam = paper_family()
+    regions = ("PL", "NL", "CAISO")
+    provs = [TraceProvider.for_region(r, hours=24 * days, seed=1)
+             for r in regions]
+    traces = [t.util for t in sample_population(n_containers, days=days,
+                                                seed=2)]
+    demand = np.stack(traces, axis=1)
+    rng = np.random.default_rng(3)
+    state_gb = rng.choice([0.25, 1.0, 4.0], size=n_containers)
+    cap = int(np.ceil(0.6 * n_containers))
+    eng = PlacementEngine(
+        fam, provs, region_names=regions,
+        config=PlacementConfig(capacity=cap, min_dwell=6, hysteresis=0.10))
+
+    plan_j, warmup_s, steady_s, plan_np, numpy_s = _steady_vs_numpy(
+        lambda: plan_jax(eng, demand, state_gb=state_gb),
+        lambda: eng.plan(demand, state_gb=state_gb))
+
+    assign_equal = bool((plan_j.assign == plan_np.assign).all())
+    parity = max(float(np.abs(plan_j.overhead_g - plan_np.overhead_g).max()),
+                 float(np.abs(plan_j.downtime_s - plan_np.downtime_s).max()),
+                 float(np.abs(plan_j.migrations - plan_np.migrations).max()))
+    occ = plan_j.occupancy()
+    rows = [{"backend": b, "wall_s": s, "n_containers": n_containers,
+             "n_epochs": demand.shape[0],
+             "migrations": int(p.migrations.sum()),
+             "overhead_g": float(p.overhead_g.sum())}
+            for b, s, p in (("numpy", numpy_s, plan_np),
+                            ("jax", steady_s, plan_j))]
+    derived = {
+        "n_containers": n_containers,
+        "n_epochs": demand.shape[0],
+        "numpy_s": numpy_s,
+        "warmup_s": warmup_s,
+        "steady_s": steady_s,
+        "speedup_x": numpy_s / steady_s,
+        "parity_max_abs_diff": parity,
+        "assign_equal": assign_equal,
+        "over_capacity_epochs": int((occ > cap).sum()),
     }
     return rows, derived
 

@@ -4,11 +4,16 @@ Prints ``name,us_per_call,derived`` CSV rows (plus writes full row data to
 benchmarks/out/ as CSV for plotting). Run:
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fleet_sweep,placement_sweep] [--fast true] [--json out.json]
+        [--only fleet_sweep,fleet_sweep_jax] [--fast true] [--json out.json]
 
 ``--only`` takes a comma-separated entry list; ``--json`` additionally
-writes ``{name: {us_per_call, derived}}`` to the given path (the CI
-benchmark-regression gate feeds this to benchmarks.check_regression).
+writes per-entry ``{us_per_call, wall_s, warmup_s, steady_s, derived}``
+to the given path (the CI benchmark-regression gate feeds this to
+benchmarks.check_regression). ``wall_s`` is the entry's total wall-clock;
+entries that jit-compile (the ``*_jax`` ones) report ``warmup_s`` (first
+call, includes compile) and ``steady_s`` (best steady-state call)
+separately, and their ``speedup_x`` metrics are computed from steady
+state only — so jit compile time never pollutes regression floors.
 """
 from __future__ import annotations
 
@@ -17,6 +22,13 @@ import json
 import os
 import sys
 import time
+
+def _ensure_xla_flags():
+    """CPU-tuned XLA flags for the jax-backend entries (the shared
+    helper appends them only when absent, so explicit user settings
+    win); must run before the first jax backend initialization."""
+    from repro.core.fleet_jax import ensure_cpu_xla_flags
+    ensure_cpu_xla_flags()
 
 
 def _rows_to_csv(name: str, rows: list):
@@ -33,6 +45,7 @@ def _rows_to_csv(name: str, rows: list):
 
 
 def main() -> None:
+    _ensure_xla_flags()
     args = {}
     argv = sys.argv[1:]
     for i in range(0, len(argv) - 1, 2):
@@ -58,6 +71,12 @@ def main() -> None:
         # multi-region placement planner, scalar reference vs (N, R) batch
         ("placement_sweep", figs.placement_sweep,
          {"days": 2 if fast else 3}),
+        # jit/scan JAX backend vs the NumPy fleet/placement kernels at
+        # N >= 5000 containers (steady state vs compile split)
+        ("fleet_sweep_jax", figs.fleet_sweep_jax,
+         {"days": 2 if fast else 3}),
+        ("placement_sweep_jax", figs.placement_sweep_jax,
+         {"days": 2 if fast else 3}),
     ]
     only = args.get("only")
     only_set = set(only.split(",")) if only else None
@@ -77,7 +96,13 @@ def main() -> None:
         rows, derived = fn(**kw)
         us = (time.perf_counter() - t0) * 1e6
         _rows_to_csv(name, rows)
-        report[name] = {"us_per_call": us, "derived": derived}
+        report[name] = {
+            "us_per_call": us,
+            "wall_s": us / 1e6,
+            "warmup_s": derived.get("warmup_s"),
+            "steady_s": derived.get("steady_s"),
+            "derived": derived,
+        }
         compact = json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
                               for k, v in derived.items()}, default=str)
         print(f"{name},{us:.0f},{compact}")

@@ -1,13 +1,17 @@
 """Large-scale Carbon Containers simulation across regions (paper Figs 11-16
 in miniature): per-region policy tables, a heterogeneous fleet — mixed
 regions (stacked carbon traces), mixed targets, mixed demand scales — run
-through the vectorized FleetSimulator, and a multi-region *placement* demo
-where the fleet migrates between low- and high-variability grids.
+through the vectorized FleetSimulator, a multi-region *placement* demo
+where the fleet migrates between low- and high-variability grids, and a
+device-resident JAX sweep over a 10k-container placed fleet
+(``--jax-sweep``, or ``make jax-sweep``).
 
     PYTHONPATH=src python examples/simulate_regions.py \
-        [--jobs 20] [--backend fleet|scalar] [--fleet 120] [--placement]
+        [--jobs 20] [--backend fleet|scalar] [--fleet 120] [--placement] \
+        [--jax-sweep]
 """
 import sys
+import time
 
 import numpy as np
 
@@ -170,6 +174,64 @@ def multi_region_placement(n: int):
           f"static {eff_s:.0f} ({100.0 * (eff_m / eff_s - 1.0):+.1f}%)\n")
 
 
+def jax_sweep(n_containers: int = 10080, n_targets: int = 12,
+              days: int = 3):
+    """A 10k-container placed fleet sweep, device-resident end-to-end:
+    the JAX placement kernel assigns every trace column a region per
+    epoch, then one jit/scan per policy sweeps all (target x trace)
+    columns — against the same sweep on the NumPy fleet backend."""
+    from repro.core.policy import CarbonContainerPolicy
+    from repro.core.simulator import SimConfig, sweep_population
+
+    n_traces = n_containers // n_targets
+    fam = paper_family()
+    regions = ("PL", "NL", "CAISO")
+    provs = [TraceProvider.for_region(r, hours=24 * days, seed=1)
+             for r in regions]
+    traces = [t.util for t in sample_population(n_traces, days=days,
+                                                seed=3)]
+    T = len(traces[0])
+    cap = int(np.ceil(0.6 * n_traces))
+    eng = PlacementEngine(
+        fam, provs, interval_s=INTERVAL_S, region_names=regions,
+        config=PlacementConfig(capacity=cap, min_dwell=6, hysteresis=0.10))
+    targets = list(np.linspace(20.0, 80.0, n_targets))
+    policies = {"CC (energy)":
+                lambda: CarbonContainerPolicy(variant="energy")}
+    cfg = SimConfig(target_rate=0.0)
+    n_total = n_traces * n_targets
+
+    print(f"--- jax sweep: {n_total} placed containers "
+          f"({n_traces} traces x {n_targets} targets, {T} epochs, "
+          f"capacity {cap}/region) ---")
+    t0 = time.perf_counter()
+    rows = sweep_population(policies, fam, traces, None, targets, cfg,
+                            backend="jax", placement=eng)
+    warm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rows = sweep_population(policies, fam, traces, None, targets, cfg,
+                            backend="jax", placement=eng)
+    steady = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rows_np = sweep_population(policies, fam, traces, None, targets, cfg,
+                               backend="fleet", placement=eng)
+    numpy_s = time.perf_counter() - t0
+    drift = max(abs(a["carbon_rate_mean"] - b["carbon_rate_mean"])
+                for a, b in zip(rows, rows_np))
+    rate = n_total * T / steady
+    print(f"  jax:   first call {warm:.2f}s (jit compile), steady "
+          f"{steady:.2f}s  ({rate/1e6:.1f}M container-epochs/s)")
+    print(f"  numpy: {numpy_s:.2f}s  -> {numpy_s/steady:.1f}x steady-state "
+          f"speedup (parity drift {drift:.1e})")
+    print(f"\n  {'target':>7s} {'g/hr':>8s} {'throttle%':>10s} "
+          f"{'migs':>6s} {'placement migs':>14s}")
+    for r in rows:
+        print(f"  {r['target']:7.1f} {r['carbon_rate_mean']:8.2f} "
+              f"{r['throttle_mean']:10.2f} {r['migrations_mean']:6.1f} "
+              f"{r['placement_migrations_mean']:14.1f}")
+    print()
+
+
 def main():
     n_jobs = _arg("--jobs", 20, int)
     backend = _arg("--backend", "fleet", str)
@@ -177,6 +239,13 @@ def main():
         raise SystemExit(f"--backend must be 'fleet' or 'scalar', "
                          f"got {backend!r}")
     n_fleet = _arg("--fleet", 120, int)
+    if "--jax-sweep" in sys.argv:        # jax demo only (make jax-sweep)
+        # CPU-tuned XLA flags, set before jax initializes; explicit
+        # user settings win
+        from repro.core.fleet_jax import ensure_cpu_xla_flags
+        ensure_cpu_xla_flags()
+        jax_sweep(_arg("--containers", 10080, int))
+        return
     if "--placement" in sys.argv:        # placement demo only (make placement)
         multi_region_placement(n_fleet)
         return

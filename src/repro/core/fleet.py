@@ -160,6 +160,71 @@ class FleetResult:
         return [self.result(i) for i in range(self.n)]
 
 
+def _carbon_matrix(carbon, T: int, interval_s: float):
+    """(T,) or (T, N) intensity values at each interval start."""
+    if isinstance(carbon, np.ndarray):
+        return carbon
+    t = np.arange(T, dtype=np.float64) * interval_s
+    if hasattr(carbon, "intensity_series"):
+        return carbon.intensity_series(t)
+    return np.array([carbon.intensity(float(x)) for x in t])
+
+
+def _prepare_run_inputs(demand, carbon, targets, epsilon, state_gb,
+                        demand_scale, interval_s: float):
+    """Shared `run()` prologue for the fleet and jax backends: demand
+    shaping/validation, carbon-matrix resolution, per-container
+    broadcasts. One implementation so the two backends can never drift
+    on what inputs they accept."""
+    demand = np.asarray(demand, dtype=np.float64)
+    if demand.ndim == 1:
+        demand = demand[:, None]
+    T, N = demand.shape
+    if demand_scale is not None and np.any(np.asarray(demand_scale) != 1.0):
+        demand = demand * demand_scale
+    if demand.size and demand.min() < 0.0:
+        raise ValueError("fleet demand must be non-negative")
+    cmat = _carbon_matrix(carbon, T, interval_s)
+    if cmat.ndim not in (1, 2) or cmat.shape[0] != T or (
+            cmat.ndim == 2 and cmat.shape[1] != N):
+        raise ValueError(f"carbon matrix shape {cmat.shape} does not "
+                         f"match demand (T={T}, N={N}); expected (T,) "
+                         f"or (T, N)")
+    targets = np.broadcast_to(np.asarray(targets, dtype=np.float64), (N,))
+    epsilon = np.broadcast_to(np.asarray(epsilon, dtype=np.float64), (N,))
+    state_gb = np.broadcast_to(np.asarray(state_gb, dtype=np.float64), (N,))
+    return demand, cmat, targets, epsilon, state_gb, T, N
+
+
+class _LoopScratch:
+    """Preallocated per-epoch temporaries for `FleetSimulator._loop`.
+
+    The stepping loop previously allocated ~20 fresh (N,) arrays every
+    epoch (masks, gathers, plant-step temps); reusing fixed buffers via
+    ufunc `out=` keeps the arithmetic and its term order identical (the
+    1e-9 scalar-parity suite pins this) while removing the allocator
+    from the hot loop. Measured effect (see the fleet_sweep benchmark
+    notes in benchmarks/figs.py): ~6-8% wall-clock at N~5000, neutral at
+    N~500 — NumPy's small-block cache already amortizes most allocation,
+    so only the single-pass ufunc-out rewrites pay; `np.take(..., out=)`
+    needs mode="clip" to match fancy indexing's fast path, and rewrites
+    that would split one `np.where` into two passes are kept as-is.
+    """
+
+    __slots__ = ("migm", "i1", "m1", "m2", "m3", "m4", "m5", "m6",
+                 "m7", "m8", "m9", "f1", "f2", "f3", "f4", "f5", "f6",
+                 "f7", "f8", "f9", "f10", "f11", "f12")
+
+    def __init__(self, n: int):
+        for name in ("migm", "m1", "m2", "m3", "m4", "m5", "m6", "m7",
+                     "m8", "m9"):
+            setattr(self, name, np.empty(n, dtype=bool))
+        self.i1 = np.empty(n, dtype=np.int64)
+        for name in ("f1", "f2", "f3", "f4", "f5", "f6", "f7", "f8", "f9",
+                     "f10", "f11", "f12"):
+            setattr(self, name, np.empty(n, dtype=np.float64))
+
+
 class FleetSimulator:
     """Advance N containers under one policy with array state.
 
@@ -184,12 +249,7 @@ class FleetSimulator:
 
     def _carbon_matrix(self, carbon, T: int):
         """(T,) or (T, N) intensity values at each interval start."""
-        if isinstance(carbon, np.ndarray):
-            return carbon
-        t = np.arange(T, dtype=np.float64) * self.interval_s
-        if hasattr(carbon, "intensity_series"):
-            return carbon.intensity_series(t)
-        return np.array([carbon.intensity(float(x)) for x in t])
+        return _carbon_matrix(carbon, T, self.interval_s)
 
     # -- main loop --------------------------------------------------------
 
@@ -198,25 +258,9 @@ class FleetSimulator:
             ) -> FleetResult:
         t = self.tables
         dt = self.interval_s
-        demand = np.asarray(demand, dtype=np.float64)
-        if demand.ndim == 1:
-            demand = demand[:, None]
-        T, N = demand.shape
-        if demand_scale is not None and np.any(np.asarray(demand_scale) != 1.0):
-            demand = demand * demand_scale
-        if demand.size and demand.min() < 0.0:
-            raise ValueError("fleet demand must be non-negative")
-        cmat = self._carbon_matrix(carbon, T)
-        if cmat.ndim not in (1, 2) or cmat.shape[0] != T or (
-                cmat.ndim == 2 and cmat.shape[1] != N):
-            raise ValueError(f"carbon matrix shape {cmat.shape} does not "
-                             f"match demand (T={T}, N={N}); expected (T,) "
-                             f"or (T, N)")
-        targets = np.broadcast_to(np.asarray(targets, dtype=np.float64),
-                                  (N,))
-        epsilon = np.broadcast_to(np.asarray(epsilon, dtype=np.float64), (N,))
-        state_gb = np.broadcast_to(np.asarray(state_gb, dtype=np.float64),
-                                   (N,))
+        (demand, cmat, targets, epsilon, state_gb, T, N) = \
+            _prepare_run_inputs(demand, carbon, targets, epsilon, state_gb,
+                                demand_scale, self.interval_s)
         cf = _closed_form_kind(policy)
         if cf is not None:
             return self._run_closed_form(cf, demand, cmat, targets, epsilon,
@@ -228,6 +272,7 @@ class FleetSimulator:
         served_series = np.zeros((T, N)) if record else None
         power = np.zeros(N)
         served = np.zeros(N)
+        scratch = _LoopScratch(N)
 
         # loop-invariant precomputations (hoisted out of the time loop):
         # rolling-window demand peaks (ContainerState.recent_peak) ...
@@ -243,7 +288,8 @@ class FleetSimulator:
         with np.errstate(divide="ignore", invalid="ignore"):
             self._loop(policy, st, demand, cmat, targets, epsilon, state_gb,
                        budget_mat, peak_mat, ddt_mat, power_series,
-                       served_series, power, served, rows, T, N, n_slices)
+                       served_series, power, served, rows, T, N, n_slices,
+                       scratch)
         # elapsed accumulates dt once per interval for every container;
         # hoisted out of the loop as the identical sequential sum
         st.elapsed_s.fill(float(np.cumsum(np.full(T, dt))[-1]) if T else 0.0)
@@ -266,11 +312,12 @@ class FleetSimulator:
 
     def _loop(self, policy, st, demand, cmat, targets, epsilon, state_gb,
               budget_mat, peak_mat, ddt_mat, power_series, served_series,
-              power, served, rows, T, N, n_slices):
+              power, served, rows, T, N, n_slices, scratch):
         t = self.tables
         dt = self.interval_s
         record = power_series is not None
         c_is_mat = cmat.ndim == 2
+        sc = scratch
         for n in range(T):
             d = demand[n]
             c = cmat[n] if c_is_mat else float(cmat[n])
@@ -281,24 +328,28 @@ class FleetSimulator:
             served.fill(0.0)
 
             # ---- migration in progress: both slices powered, no work ----
-            migm = st.migrating_s > 0.0
+            migm = np.greater(st.migrating_s, 0.0, out=sc.migm)
             any_mig = np.count_nonzero(migm)
             if any_mig:
                 dstc = np.where(migm, st.migrate_target, 0)
-                np.copyto(power, t.base_w[st.slice_idx] + t.base_w[dstc],
-                          where=migm)
+                np.take(t.base_w, st.slice_idx, out=sc.f1, mode="clip")
+                np.take(t.base_w, dstc, out=sc.f2, mode="clip")
+                np.add(sc.f1, sc.f2, out=sc.f1)
+                np.copyto(power, sc.f1, where=migm)
 
             kind, dy, tg = policy.decide_batch(t, st, d, c, targets, epsilon,
                                                budget=budget_mat[n])
             # fold the migrating containers out of `kind` so the per-action
-            # masks below need no separate `& act`
+            # masks below need no separate `& act` (copy, not in-place:
+            # decide_batch's return stays the policy's to reuse)
             if any_mig:
                 kind = np.where(migm, -1, kind)
-            counts = np.bincount(np.maximum(kind, 0), minlength=4)
+            counts = np.bincount(np.maximum(kind, 0, out=sc.i1),
+                                 minlength=4)
 
             # ---- suspend ------------------------------------------------
             if counts[K_SUSPEND]:
-                m_sus = kind == K_SUSPEND
+                m_sus = np.equal(kind, K_SUSPEND, out=sc.m1)
                 st.suspended[m_sus] = True
                 st.suspended_s[m_sus] += dt
                 if not self.suspend_releases_slice:
@@ -307,33 +358,42 @@ class FleetSimulator:
             # ---- resume (joins the run path below) ----------------------
             m_res = None
             if counts[K_RESUME]:
-                m_res = kind == K_RESUME
+                m_res = np.equal(kind, K_RESUME, out=sc.m2)
                 st.suspended[m_res] = False
-                has_t = m_res & (tg >= 0)
+                has_t = np.greater_equal(tg, 0, out=sc.m3)
+                np.logical_and(m_res, has_t, out=has_t)
                 st.slice_idx[has_t] = tg[has_t]
                 np.copyto(st.duty, dy, where=m_res)
 
-            m_stay = kind == K_STAY
+            m_stay = np.equal(kind, K_STAY, out=sc.m4)
             np.copyto(st.duty, dy, where=m_stay)
 
             # ---- migrate ------------------------------------------------
             subm = None
             if counts[K_MIGRATE]:
-                m_mig = kind == K_MIGRATE
+                m_mig = np.equal(kind, K_MIGRATE, out=sc.m5)
                 st.migrations[m_mig] += 1
                 dstc = np.where(m_mig, tg, 0)
-                bw = np.maximum(t.bw_gbps[st.slice_idx], t.bw_gbps[dstc])
+                bw = np.maximum(np.take(t.bw_gbps, st.slice_idx, out=sc.f1, mode="clip"),
+                                np.take(t.bw_gbps, dstc, out=sc.f2, mode="clip"),
+                                out=sc.f1)
                 mig_s = self.mig.stop_and_copy_time_batch(state_gb, bw)
-                down = np.minimum(mig_s, dt) / dt
-                p_mig = t.base_w[st.slice_idx] + t.base_w[dstc]
+                down = np.divide(np.minimum(mig_s, dt, out=sc.f2), dt,
+                                 out=sc.f2)
+                p_mig = np.add(np.take(t.base_w, st.slice_idx, out=sc.f3, mode="clip"),
+                               np.take(t.base_w, dstc, out=sc.f4, mode="clip"),
+                               out=sc.f3)
                 np.copyto(st.duty, dy, where=m_mig)
-                longm = m_mig & (mig_s >= dt)
+                longm = np.greater_equal(mig_s, dt, out=sc.m6)
+                np.logical_and(m_mig, longm, out=longm)
                 # long migration: whole interval down, src slice accounted
                 np.copyto(st.migrate_target, tg, where=longm)
-                np.copyto(st.migrating_s, mig_s - dt, where=longm)
+                np.copyto(st.migrating_s, np.subtract(mig_s, dt, out=sc.f4),
+                          where=longm)
                 np.copyto(power, p_mig, where=longm)
                 # sub-interval: rest of the interval served on the dest
-                subm = m_mig & ~longm
+                subm = np.logical_and(m_mig, np.logical_not(longm, out=sc.m7),
+                                      out=sc.m7)
                 if not np.count_nonzero(subm):
                     subm = None
                 else:
@@ -341,27 +401,51 @@ class FleetSimulator:
                     st.dwell[subm] = 0
 
             # ---- plant step for running containers ----------------------
-            full = m_stay if m_res is None else (m_res | m_stay)
+            if m_res is None:
+                full = m_stay
+            else:
+                full = np.logical_or(m_res, m_stay, out=sc.m8)
             if subm is not None or np.count_nonzero(full):
-                mult_cur = t.multiple[st.slice_idx]
-                base_cur = t.base_w[st.slice_idx]
-                cap = mult_cur * np.minimum(np.maximum(st.duty, 0.0), 1.0)
-                srv = np.minimum(d, cap)
-                util = srv / mult_cur        # in [0, 1]: demand >= 0, duty
-                pw = base_cur + (t.peak_w[st.slice_idx] - base_cur) * util
-                #    clipped -> the scalar path's util clamp is an identity
+                mult_cur = np.take(t.multiple, st.slice_idx, out=sc.f5, mode="clip")
+                base_cur = np.take(t.base_w, st.slice_idx, out=sc.f6, mode="clip")
+                cap = np.multiply(
+                    mult_cur,
+                    np.minimum(np.maximum(st.duty, 0.0, out=sc.f7), 1.0,
+                               out=sc.f7),
+                    out=sc.f7)
+                srv = np.minimum(d, cap, out=sc.f8)
+                util = np.divide(srv, mult_cur, out=sc.f9)
+                #    in [0, 1]: demand >= 0, duty clipped -> the scalar
+                #    path's util clamp is an identity
+                pw = np.take(t.peak_w, st.slice_idx, out=sc.f10, mode="clip")
+                np.subtract(pw, base_cur, out=pw)
+                np.multiply(pw, util, out=pw)
+                np.add(base_cur, pw, out=pw)
                 np.copyto(power, pw, where=full)
                 np.copyto(served, srv, where=full)
                 if subm is not None:
-                    np.copyto(power, down * p_mig + (1.0 - down) * pw,
-                              where=subm)
-                    np.copyto(served, (1.0 - down) * srv, where=subm)
+                    # down * p_mig + (1 - down) * pw, built in scratch
+                    np.subtract(1.0, down, out=sc.f11)
+                    np.multiply(sc.f11, pw, out=sc.f11)
+                    np.multiply(down, p_mig, out=sc.f12)
+                    np.add(sc.f12, sc.f11, out=sc.f12)
+                    np.copyto(power, sc.f12, where=subm)
+                    np.subtract(1.0, down, out=sc.f11)
+                    np.multiply(sc.f11, srv, out=sc.f11)
+                    np.copyto(served, sc.f11, where=subm)
 
             # ---- fused accounting (scalar _account, vectorized) ---------
-            st.energy_wh += power * dt / 3600.0
-            st.emissions_g += power * c / 1000.0 * dt / 3600.0
-            st.work_done += served * dt
-            st.throttled_integral += np.maximum(0.0, d - served) * dt
+            st.energy_wh += np.divide(np.multiply(power, dt, out=sc.f1),
+                                      3600.0, out=sc.f1)
+            np.multiply(power, c, out=sc.f2)
+            np.divide(sc.f2, 1000.0, out=sc.f2)
+            np.multiply(sc.f2, dt, out=sc.f2)
+            np.divide(sc.f2, 3600.0, out=sc.f2)
+            st.emissions_g += sc.f2
+            st.work_done += np.multiply(served, dt, out=sc.f3)
+            np.subtract(d, served, out=sc.f4)
+            np.maximum(0.0, sc.f4, out=sc.f4)
+            st.throttled_integral += np.multiply(sc.f4, dt, out=sc.f4)
             tos_col = np.where(st.suspended, n_slices, st.slice_idx)
             st.time_on_slice_s[rows, tos_col] += dt
             if record:
@@ -371,7 +455,8 @@ class FleetSimulator:
             # ---- migration progress + dwell (after accounting) ----------
             if any_mig:
                 st.migrating_s[migm] -= dt
-                done = migm & (st.migrating_s <= 0.0)
+                done = np.less_equal(st.migrating_s, 0.0, out=sc.m9)
+                np.logical_and(migm, done, out=done)
                 st.slice_idx[done] = st.migrate_target[done]
                 st.migrate_target[done] = -1
                 st.dwell[done] = 0
@@ -530,6 +615,43 @@ class BlockPolicy:
 # Population sweep on the fleet path (backend="fleet" in sweep_population)
 # ---------------------------------------------------------------------------
 
+def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
+                          placement, plan_fn):
+    """Shared sweep prologue for the fleet and jax backends (one
+    implementation so the two can never drift on what sweeps they
+    accept): stack the equal-length traces into the policy-block demand
+    matrix, tile targets, and — with a placement engine — compute the
+    shared region plan on the real n_tr-column fleet via `plan_fn` and
+    substitute the planned per-container carbon matrix. Returns
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg)."""
+    traces = [np.asarray(tr, dtype=np.float64) for tr in traces]
+    lengths = {len(tr) for tr in traces}
+    if len(lengths) != 1:
+        raise ValueError("fleet backend needs equal-length traces; "
+                         f"got lengths {sorted(lengths)}")
+    n_tr = len(traces)
+    n_tg = len(targets)
+    stack = np.stack(traces, axis=1)                   # (T, n_tr)
+    demand_one = np.tile(stack, (1, n_tg))             # (T, n_tr*n_tg)
+    tgt_one = np.repeat(np.asarray(targets, dtype=np.float64), n_tr)
+
+    plan = None
+    if placement is not None:
+        if float(placement.interval_s) != float(cfg_base.interval_s):
+            raise ValueError(
+                f"placement engine plans on interval_s="
+                f"{placement.interval_s} but the sweep simulates at "
+                f"interval_s={cfg_base.interval_s}; construct the engine "
+                f"with the sweep's interval")
+        demand_plan = stack
+        if demand_scale is not None and np.any(
+                np.asarray(demand_scale) != 1.0):
+            demand_plan = stack * demand_scale
+        plan = plan_fn(placement, demand_plan)
+        carbon = np.tile(plan.carbon_matrix(), (1, n_tg))
+    return demand_one, tgt_one, carbon, plan, n_tr, n_tg
+
+
 def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                            carbon, targets: Sequence[float],
                            cfg_base: SimConfig,
@@ -550,32 +672,12 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
     then also carry `placement_migrations_mean` and
     `placement_overhead_g_mean`.
     """
-    traces = [np.asarray(tr, dtype=np.float64) for tr in traces]
-    lengths = {len(tr) for tr in traces}
-    if len(lengths) != 1:
-        raise ValueError("fleet backend needs equal-length traces; "
-                         f"got lengths {sorted(lengths)}")
-    n_tr = len(traces)
-    n_tg = len(targets)
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg) = \
+        _prepare_sweep_inputs(traces, carbon, targets, cfg_base,
+                              demand_scale, placement,
+                              lambda eng, d: eng.plan(
+                                  d, state_gb=cfg_base.state_gb))
     per_pol = n_tr * n_tg
-    stack = np.stack(traces, axis=1)                   # (T, n_tr)
-    demand_one = np.tile(stack, (1, n_tg))             # (T, per_pol)
-    tgt_one = np.repeat(np.asarray(targets, dtype=np.float64), n_tr)
-
-    plan = None
-    if placement is not None:
-        if float(placement.interval_s) != float(cfg_base.interval_s):
-            raise ValueError(
-                f"placement engine plans on interval_s="
-                f"{placement.interval_s} but the sweep simulates at "
-                f"interval_s={cfg_base.interval_s}; construct the engine "
-                f"with the sweep's interval")
-        demand_plan = stack
-        if demand_scale is not None and np.any(
-                np.asarray(demand_scale) != 1.0):
-            demand_plan = stack * demand_scale
-        plan = placement.plan(demand_plan, state_gb=cfg_base.state_gb)
-        carbon = np.tile(plan.carbon_matrix(), (1, n_tg))  # (T, per_pol)
 
     sim = FleetSimulator(family, interval_s=cfg_base.interval_s,
                          suspend_releases_slice=cfg_base.suspend_releases_slice)
@@ -610,30 +712,51 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
         for p, (name, _) in enumerate(loop_pols):
             results[name] = (res, p * per_pol)
 
+    return _aggregate_sweep_rows(policies, results, targets, n_tr, plan)
+
+
+def _aggregate_sweep_rows(policies: dict, results: dict, targets, n_tr: int,
+                          plan=None) -> list:
+    """Fold per-container FleetResult arrays into the sweep's aggregate
+    rows. `results` maps policy name -> (FleetResult, column offset);
+    shared by the fleet and jax sweep backends so the two emit the same
+    rows in the same order. Aggregation is sliced-array arithmetic, not
+    per-container Python loops — at fleet scale (N >= 5000) the loop
+    version costs tens of milliseconds, which is real money against the
+    jax backend's steady-state sweep times."""
+    # hoist the whole-fleet derived arrays out of the per-target loop
+    # (the avg_* properties rebuild (N,) arrays on every access)
+    derived = {}
+    for name, (res, off) in results.items():
+        if id(res) not in derived:
+            el = np.maximum(res.elapsed_s, 1e-9)[:, None]
+            tos = res.time_on_slice_s
+            derived[id(res)] = (res.avg_carbon_rate, res.avg_throttle_pct,
+                                res.suspended_frac,
+                                np.where(tos > 0.0, tos / el, 0.0))
     rows = []
     for ti, target in enumerate(targets):
         for name in policies:
             res, off = results[name]
-            rates_a = res.avg_carbon_rate
-            thr_a = res.avg_throttle_pct
-            susp_a = res.suspended_frac
-            idx = range(off + ti * n_tr, off + (ti + 1) * n_tr)
-            rates = [float(rates_a[i]) for i in idx]
-            thr = [float(thr_a[i]) for i in idx]
-            migs = [int(res.migrations[i]) for i in idx]
-            susp = [float(susp_a[i]) for i in idx]
-            slice_time: dict = {}
-            for i in idx:
-                for k, v in res.time_on_slice(i).items():
-                    slice_time[k] = slice_time.get(k, 0.0) + v / n_tr
+            rates_a, thr_a, susp_a, tos_fr = derived[id(res)]
+            sl = slice(off + ti * n_tr, off + (ti + 1) * n_tr)
+            rates = rates_a[sl]
+            thr = thr_a[sl]
+            # time_on_slice, aggregated: mean over containers of the
+            # per-container fraction, counting only containers that
+            # spent time there (res.time_on_slice(i)'s `if s > 0` rule)
+            fracs = tos_fr[sl].sum(axis=0) / n_tr
+            slice_time = {k: float(v)
+                          for k, v in zip(res.slice_names, fracs)
+                          if v != 0.0}
             row = {
                 "policy": name, "target": target,
                 "carbon_rate_mean": float(np.mean(rates)),
                 "carbon_rate_std": float(np.std(rates)),
                 "throttle_mean": float(np.mean(thr)),
                 "throttle_std": float(np.std(thr)),
-                "migrations_mean": float(np.mean(migs)),
-                "suspended_frac_mean": float(np.mean(susp)),
+                "migrations_mean": float(np.mean(res.migrations[sl])),
+                "suspended_frac_mean": float(np.mean(susp_a[sl])),
                 "time_on_slice": slice_time,
             }
             if plan is not None:

@@ -1,0 +1,748 @@
+"""JAX backend for the fleet simulator: jit/scan sweeps, device-resident.
+
+`repro.core.fleet.FleetSimulator` advances the whole (N,) fleet per
+monitoring interval with NumPy array state, but every epoch still
+round-trips through the Python interpreter (~100 array-op dispatches per
+step), which caps sweeps at low-thousands of containers. This module
+ports the decision kernels and the epoch loop to JAX:
+
+  - each policy's `decide_batch` masking scheme becomes a pure function
+    on (N,) arrays, mirroring the NumPy kernels term-for-term;
+  - the epoch loop becomes one `jax.lax.scan` over time with the whole
+    fleet state as the carry, so a full run compiles to a single XLA
+    computation with no per-step Python dispatch;
+  - everything runs float64 (`jax.experimental.enable_x64`, scoped so
+    the f32 model/kernel suites are untouched) and device-resident: one
+    host->device push of the inputs, one device->host pull of the final
+    state.
+
+Branchy NumPy fast paths (`if np.count_nonzero(...)` gates, the
+compacted `_best_fit_up_batch` walk, the closed-form dispatch for
+state-free policies) are pure optimizations — executing the gated block
+with an all-False mask is a no-op — so the scan step simply evaluates
+every branch masked. The three `dwell` update branches in the NumPy loop
+likewise collapse to one rule: dwell += ((kind >= 0) & (kind !=
+K_MIGRATE)) after the migration-done reset. Clamps the NumPy path keeps
+but documents as identities (duty and utilization already lie in [0, 1])
+are elided.
+
+XLA:CPU performance notes (measured via the fleet_sweep_jax benchmark):
+XLA's CPU pipeline has no multi-output loop fusion, so a value consumed
+by k downstream fusion roots gets its whole producer chain *duplicated*
+k times — a naive port of the step (one big chain feeding ~15 carry
+outputs) re-evaluates the entire decision cascade per output and runs
+slower than NumPy. Gathers fare no better: a slice-table gather inside
+the decision chain fragments the surrounding fusion and costs ~20x a
+fused select. Three techniques recover the speedup:
+
+  - static LUTs (`_lutf`/`_luti`): the slice family is tiny and static,
+    so every table lookup compiles to a select chain over per-slice
+    literals — fully fusible and SIMD-friendly, no gathers anywhere;
+  - `_pack` stage boundaries: `optimization_barrier` around a row-stack
+    force-materializes shared intermediates (the barrier stops
+    slice-of-concat forwarding and is itself stripped late, leaving a
+    plain materialized buffer); downstream fusions read rows instead of
+    recomputing chains;
+  - packed carry: the scan carry is three arrays (f64 accumulators +
+    f64 dynamics + i32 state) instead of ~14, and all accumulator
+    updates land in a single stacked add, keeping the number of fusion
+    roots — and hence chain duplication — small.
+
+Results come back as the same `FleetResult` dataclass; parity against
+the NumPy backend is pinned to 1e-6 by `tests/test_fleet_jax.py` (and
+the NumPy backend stays pinned to the scalar loop at 1e-9, anchoring
+the chain).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.migration import MigrationCostModel
+from repro.cluster.slices import SliceFamily
+from repro.core.fleet import (FleetResult, _aggregate_sweep_rows,
+                              _prepare_run_inputs, _prepare_sweep_inputs,
+                              _PEAK_WINDOW)
+from repro.core.policy import K_MIGRATE, K_RESUME, K_STAY, K_SUSPEND
+from repro.core.simulator import SimConfig
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import enable_x64
+    HAS_JAX = True
+except ImportError:                                    # pragma: no cover
+    HAS_JAX = False
+    jax = jnp = lax = enable_x64 = None
+
+# rows of the packed scan carry (see _fleet_scan): acc carries the four
+# raw f64 sums, dyni carries i32 state then interval counters
+_ACC_ROWS = 4            # sum(power*c), sum(power), sum(served), sum(thr)
+_I_SLICE, _I_MT, _I_DWELL, _I_MIGS, _I_SUS, _I_SUSCNT = range(6)
+_MIN_SHARD_COLS = 1024   # don't shard fleets smaller than this per device
+
+
+def _require_jax():
+    if not HAS_JAX:
+        raise ImportError("backend='jax' requires jax; install jax[cpu] "
+                          "or use backend='fleet'")
+
+
+# CPU-tuned XLA flags: the legacy CPU runtime sidesteps the thunk
+# executor's per-kernel dispatch overhead inside scans, and multiple
+# host devices let `FleetSimulatorJax.run` shard the container axis
+# across cores (shards double as cache blocks, so more shards than
+# cores still helps large fleets).
+_CPU_XLA_FLAGS = ("--xla_cpu_use_thunk_runtime=false",
+                  "--xla_force_host_platform_device_count=4")
+
+
+def ensure_cpu_xla_flags():
+    """Append the CPU-tuned XLA flags to XLA_FLAGS unless the caller
+    already set them (explicit user settings win). Must run before the
+    first XLA backend initialization — i.e. before any jax computation,
+    not necessarily before `import jax` — to take effect. The benchmark
+    harness and the `--jax-sweep` demo call this; library users export
+    the flags themselves (see README "Backends")."""
+    import os
+    flags = os.environ.get("XLA_FLAGS", "")
+    for f in _CPU_XLA_FLAGS:
+        if f.split("=")[0] not in flags:
+            flags = (flags + " " + f).strip()
+    os.environ["XLA_FLAGS"] = flags
+
+
+class _TablesS(NamedTuple):
+    """FamilyTables as a hashable constant (jit static arg): per-slice
+    values become Python tuples so every lookup compiles to a select
+    chain over literals instead of a fusion-breaking gather."""
+    base_w: tuple
+    peak_w: tuple
+    multiple: tuple
+    bw_gbps: tuple
+    next_smaller: tuple
+    next_larger: tuple
+    n_slices: int
+    smallest: int
+    baseline_idx: int
+    well_formed: bool
+
+    @classmethod
+    def from_tables(cls, t) -> "_TablesS":
+        return cls(base_w=tuple(float(x) for x in t.base_w),
+                   peak_w=tuple(float(x) for x in t.peak_w),
+                   multiple=tuple(float(x) for x in t.multiple),
+                   bw_gbps=tuple(float(x) for x in t.bw_gbps),
+                   next_smaller=tuple(int(x) for x in t.next_smaller),
+                   next_larger=tuple(int(x) for x in t.next_larger),
+                   n_slices=len(t.multiple),
+                   smallest=int(t.smallest),
+                   baseline_idx=int(t.baseline_idx),
+                   well_formed=bool(t.well_formed))
+
+
+def _lutf(vals: tuple, idx):
+    """Float table lookup as a select chain over literals (`idx` must
+    already be clamped into range)."""
+    out = jnp.full(idx.shape, vals[0], dtype=jnp.float64)
+    for s in range(1, len(vals)):
+        out = jnp.where(idx == s, vals[s], out)
+    return out
+
+
+def _luti(vals: tuple, idx):
+    """Integer table lookup as a select chain over literals."""
+    out = jnp.full(idx.shape, vals[0], dtype=jnp.int32)
+    for s in range(1, len(vals)):
+        out = jnp.where(idx == s, vals[s], out)
+    return out
+
+
+def _pack(*rows):
+    """Force-materialize a group of same-dtype (N,) rows as one (R, N)
+    buffer. The `optimization_barrier` keeps algebraic simplification
+    from forwarding `pack[r]` back to the un-materialized producer; XLA
+    strips the barrier itself after that, so what remains is a plain
+    concatenate fusion evaluated once. Consumers index rows instead of
+    re-deriving them (XLA:CPU would otherwise clone the whole producer
+    chain into every consumer fusion)."""
+    return lax.optimization_barrier(jnp.stack(rows))
+
+
+# ---------------------------------------------------------------------------
+# Decision kernels (staged ports of the policies' decide_batch)
+# ---------------------------------------------------------------------------
+
+def _policy_spec(policy) -> tuple:
+    """Hashable kernel spec for a policy instance (jit cache key)."""
+    from repro.core.policy import (CarbonAgnosticPolicy,
+                                   CarbonContainerPolicy,
+                                   SuspendResumePolicy)
+    if type(policy) is CarbonAgnosticPolicy:
+        return ("agnostic",)
+    if type(policy) is SuspendResumePolicy:
+        return ("suspend_resume",)
+    if type(policy) is CarbonContainerPolicy:
+        return ("cc", policy.variant, bool(policy.allow_migration),
+                int(policy.min_dwell), float(policy.idle_margin))
+    raise TypeError(
+        f"backend='jax' has no decision kernel for {type(policy).__name__}; "
+        f"stock policies only (use backend='fleet' for custom policies)")
+
+
+def _nl_chain(tabs: _TablesS, i: int) -> list:
+    """Static next-larger chain upward from slice i (exclusive)."""
+    chain = []
+    k = tabs.next_larger[i]
+    while k >= 0:
+        chain.append(k)
+        k = tabs.next_larger[k]
+    return chain
+
+
+def _best_fit_up_j(tabs: _TablesS, i0, demand, budget):
+    """`_best_fit_up_batch`, statically unrolled: the walk's visit order
+    is a compile-time property of the slice family, so per-slice
+    fit/serve predicates are computed once against literals and the
+    per-start-slice outcome is a nested select — no table lookups at
+    all. Runs full-width (no `active0` compaction): the walk has no side
+    effects, so callers mask its result (`k_up >= 0` only consulted
+    where the scalar path would have walked)."""
+    S = tabs.n_slices
+    # per-slice predicates against literals (shared by every chain)
+    fits = []
+    geq = []
+    for s in range(S):
+        u_s = jnp.minimum(demand / tabs.multiple[s], 1.0)
+        pw_s = (tabs.base_w[s]
+                + (tabs.peak_w[s] - tabs.base_w[s]) * u_s)
+        fits.append(pw_s <= budget)
+        geq.append(demand <= tabs.multiple[s])
+    res = jnp.full(demand.shape, -1, dtype=jnp.int32)
+    for i in range(S):
+        chain = _nl_chain(tabs, i)
+        if not chain:
+            continue
+        # walk outcome from start i, built from the chain's end backward:
+        # at k: not fits -> -1; fits and (serves | last) -> k; else next
+        last = chain[-1]
+        r = jnp.where(fits[last], last, -1)
+        for k in reversed(chain[:-1]):
+            r = jnp.where(fits[k], jnp.where(geq[k], k, r), -1)
+        res = jnp.where(i0 == i, r, res)
+    return res.astype(jnp.int32)
+
+
+def _decide_cc(spec, tabs, i0, sus, dwell, peak_r, d, c, budget):
+    """CarbonContainerPolicy.decide_batch, staged.
+
+    Mask priority == scalar control flow, exactly as the NumPy kernel
+    (whose `decided` bookkeeping resolves to the disjoint branch masks
+    used here). Shared float quantities and the expensive branch masks
+    are `_pack`-materialized so the kind/duty/target select chains stay
+    shallow.
+    """
+    _, variant, can_mig, min_dwell, idle_margin = spec
+    base_i = _lutf(tabs.base_w, i0)
+    peak_i = _lutf(tabs.peak_w, i0)
+    mult_i = _lutf(tabs.multiple, i0)
+    ns = _luti(tabs.next_smaller, i0)
+    has_j = ns >= 0
+    jj = jnp.maximum(ns, 0)
+    base_j = _lutf(tabs.base_w, jj)
+    peak_j = _lutf(tabs.peak_w, jj)
+    mult_j = _lutf(tabs.multiple, jj)
+    span_i = peak_i - base_i
+    span_j = peak_j - base_j
+
+    # --- stage 1: shared float quantities --------------------------------
+    u_cap_i = jnp.minimum(1.0, (budget - base_i) / span_i)
+    if not tabs.well_formed:
+        u_cap_i = jnp.where(peak_i <= base_i, 1.0, u_cap_i)
+    u_cap_i = jnp.where(budget <= base_i, 0.0, u_cap_i)
+    u_cap_j = jnp.minimum(1.0, (budget - base_j) / span_j)
+    if not tabs.well_formed:
+        u_cap_j = jnp.where(peak_j <= base_j, 1.0, u_cap_j)
+    u_cap_j = jnp.where(budget <= base_j, 0.0, u_cap_j)
+    u_need_i = jnp.minimum(d / mult_i, 1.0)
+    b_j0 = tabs.base_w[tabs.smallest]
+    p_j0 = tabs.peak_w[tabs.smallest]
+    u_cap_j0 = jnp.minimum(1.0, (budget - b_j0) / (p_j0 - b_j0))
+    if not tabs.well_formed:
+        u_cap_j0 = jnp.where(p_j0 <= b_j0, 1.0, u_cap_j0)
+    u_cap_j0 = jnp.where(budget <= b_j0, 0.0, u_cap_j0)
+    pw_need_i = base_i + span_i * u_need_i
+    # materialize every LUT-bearing quantity the mask and duty chains
+    # read more than once (a re-evaluated chain re-evaluates its LUTs)
+    f1 = _pack(u_cap_i, u_cap_j, u_need_i, u_cap_j0, mult_i, mult_j,
+               base_j, peak_j, pw_need_i, base_i, span_i)
+    (u_cap_i, u_cap_j, u_need_i, u_cap_j0, mult_i, mult_j, base_j,
+     peak_j, pw_need_i, base_i, span_i) = (f1[r] for r in range(11))
+    span_j = peak_j - base_j
+
+    if variant == "energy" and can_mig:
+        k_up = _best_fit_up_j(tabs, i0, d, budget)
+
+    # --- stage 2: branch masks, in scalar return order -------------------
+    resume_ok = sus & (b_j0 <= budget) & (u_cap_j0 > 0.0)
+    base_over = base_i > budget
+    over = (pw_need_i > budget) | base_over
+    hard = over & (base_over | (u_cap_i <= 0.0)) & ~sus
+    soft = over & ~hard & ~sus
+    if can_mig:
+        # soft: emissions/throttle comparison on the next-smaller slice
+        q_new = u_cap_i
+        throttle_i = jnp.maximum(0.0, d - mult_i * q_new)
+        u_qi = jnp.minimum(q_new, u_need_i)
+        c_i = (base_i + span_i * u_qi) * c / 1000.0
+        u_j = jnp.minimum(jnp.minimum(d / mult_j, u_cap_j), 1.0)
+        throttle_j = jnp.maximum(0.0, d - mult_j * u_j)
+        c_j = (base_j + span_j * u_j) * c / 1000.0
+        s1 = (soft & has_j & (c_j < c_i)
+              & (throttle_j <= throttle_i + 1e-12))
+    else:
+        s1 = jnp.zeros(d.shape, dtype=bool)
+    below = ~over & ~sus
+    if variant == "energy":
+        if can_mig:
+            can_idle = dwell >= min_dwell
+            peak = jnp.maximum(peak_r, d)
+            u_jp = peak / mult_j
+            pw_jp = base_j + span_j * jnp.minimum(u_jp, 1.0)
+            e1 = (below & can_idle & has_j
+                  & (u_jp <= jnp.minimum(u_cap_j, 0.9))
+                  & (pw_jp < (1.0 - idle_margin) * pw_need_i))
+            throttled = below & ~e1 & (d > mult_i * u_cap_i)
+            m1 = _pack(*(m.astype(jnp.int32)
+                         for m in (resume_ok, hard, soft, s1, e1,
+                                   throttled, has_j)),
+                       k_up, jj)
+            resume_ok, hard, soft, s1, e1, throttled, has_j = (
+                m1[r] > 0 for r in range(7))
+            k_up = m1[7]
+            jj = m1[8]
+            e2 = throttled & (k_up >= 0)
+        else:
+            e1 = e2 = jnp.zeros(d.shape, dtype=bool)
+            m1 = _pack(resume_ok, hard, soft, s1)
+            resume_ok, hard, soft, s1 = (m1[r] for r in range(4))
+        # (the ~can_mig cascade below never reads jj/has_j)
+    else:
+        if can_mig:
+            # performance: climb next-larger while the candidate fits
+            # 0.9x budget — statically unrolled like _best_fit_up_j;
+            # `k_idx` tracks the last accepted slice (the scalar loop's
+            # `k`), `k_is_set` <=> k != i
+            climbing = below & (dwell >= min_dwell)
+            ok = []
+            for s in range(tabs.n_slices):
+                u_n = jnp.minimum(d / tabs.multiple[s], 1.0)
+                pw_n = (tabs.base_w[s]
+                        + (tabs.peak_w[s] - tabs.base_w[s]) * u_n)
+                ok.append(pw_n <= 0.9 * budget)
+            k_is_set = jnp.zeros(d.shape, dtype=bool)
+            k_idx = jnp.zeros(d.shape, dtype=jnp.int32)
+            for i in range(tabs.n_slices):
+                chain = _nl_chain(tabs, i)
+                if not chain:
+                    continue
+                reach = climbing
+                k_i = jnp.full(d.shape, -1, dtype=jnp.int32)
+                for s in chain:
+                    reach = reach & ok[s]
+                    k_i = jnp.where(reach, s, k_i)
+                here = i0 == i
+                k_idx = jnp.where(here & (k_i >= 0), k_i, k_idx)
+                k_is_set = k_is_set | (here & (k_i >= 0))
+            p1 = below & k_is_set
+        else:
+            p1 = jnp.zeros(d.shape, dtype=bool)
+            k_idx = jnp.zeros(d.shape, dtype=jnp.int32)
+        m1 = _pack(*(m.astype(jnp.int32)
+                     for m in (resume_ok, hard, soft, s1, p1, has_j)),
+                   k_idx, jj)
+        resume_ok, hard, soft, s1, p1, has_j = (m1[r] > 0
+                                                for r in range(6))
+        k_idx = m1[6]
+        jj = m1[7]
+
+    # --- stage 3: kind / duty / target from materialized masks -----------
+    kind = jnp.full(d.shape, K_STAY, dtype=jnp.int32)
+    duty = jnp.zeros(d.shape, dtype=jnp.float64)
+    tgt = jnp.full(d.shape, -1, dtype=jnp.int32)
+    kind = jnp.where(resume_ok, K_RESUME, kind)
+    kind = jnp.where(sus & ~resume_ok, K_SUSPEND, kind)
+    duty = jnp.where(resume_ok, u_cap_j0, duty)
+    tgt = jnp.where(resume_ok, tabs.smallest, tgt)
+    if can_mig:
+        h1 = hard & has_j & (base_j <= budget)
+        h_mig = hard & has_j
+        h3 = hard & ~has_j & (i0 == tabs.smallest)
+        kind = jnp.where(h_mig, K_MIGRATE, kind)
+        kind = jnp.where(h3, K_SUSPEND, kind)
+        duty = jnp.where(h1, u_cap_j, duty)
+        tgt = jnp.where(h_mig, jj, tgt)
+        kind = jnp.where(s1, K_MIGRATE, kind)
+        duty = jnp.where(s1, u_cap_j, duty)
+        tgt = jnp.where(s1, jj, tgt)
+    else:
+        kind = jnp.where(hard, K_SUSPEND, kind)
+    duty = jnp.where(soft & ~s1, u_cap_i, duty)        # stay at q_new
+    if variant == "energy":
+        rest = ~sus & ~hard & ~soft
+        if can_mig:
+            kind = jnp.where(e1 | e2, K_MIGRATE, kind)
+            duty = jnp.where(e1, u_cap_j, duty)
+            duty = jnp.where(e2, 1.0, duty)
+            tgt = jnp.where(e1, jj, tgt)
+            tgt = jnp.where(e2, k_up, tgt)
+            rest = rest & ~e1 & ~e2
+        duty = jnp.where(rest, u_cap_i, duty)
+    else:
+        rest = ~sus & ~hard & ~soft
+        kind = jnp.where(p1, K_MIGRATE, kind)
+        duty = jnp.where(p1, 1.0, duty)
+        tgt = jnp.where(p1, k_idx, tgt)
+        duty = jnp.where(rest & ~p1, u_cap_i, duty)
+    return kind, duty, tgt
+
+
+def _decide_sr(spec, tabs, i0, sus, dwell, peak, d, c, budget):
+    b = tabs.baseline_idx
+    base_b = tabs.base_w[b]
+    span_b = tabs.peak_w[b] - base_b
+    u = jnp.minimum(d / tabs.multiple[b], 1.0)
+    pw = base_b + span_b * u
+    # over <=> rate(power) > (1-eps)*target; the hoisted SR budget row
+    # carries the (1-eps)*target rate threshold (see _fleet_scan)
+    over = pw * c / 1000.0 > budget
+    kind = jnp.where(over, K_SUSPEND,
+                     jnp.where(sus, K_RESUME, K_STAY)).astype(jnp.int32)
+    duty = jnp.ones(d.shape, dtype=jnp.float64)
+    tgt = jnp.where(kind == K_RESUME, b, -1).astype(jnp.int32)
+    return kind, duty, tgt
+
+
+def _decide_agnostic(spec, tabs, i0, sus, dwell, peak, d, c, budget):
+    # baseline server: migrate back if ever off the baseline slice
+    off_base = i0 != tabs.baseline_idx
+    kind = jnp.where(off_base, K_MIGRATE, K_STAY).astype(jnp.int32)
+    duty = jnp.ones(d.shape, dtype=jnp.float64)
+    tgt = jnp.where(off_base, tabs.baseline_idx, -1).astype(jnp.int32)
+    return kind, duty, tgt
+
+
+_DECIDERS = {"agnostic": _decide_agnostic, "suspend_resume": _decide_sr,
+             "cc": _decide_cc}
+
+
+# ---------------------------------------------------------------------------
+# The scan: whole (N,) fleet state as the carry, one step per epoch
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit if HAS_JAX else lambda f, **kw: f,
+         static_argnames=("spec", "srs", "record", "tabs", "dt", "mig"))
+def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
+                srs: bool, record: bool, tabs: _TablesS, dt: float,
+                mig: tuple):
+    """One XLA computation: precompute the rolling demand peaks and the
+    per-interval power budgets (both hoisted exactly as the NumPy loop
+    hoists them), then scan the staged epoch step over time. `cmat` is
+    (T,) or (T, N).
+
+    The carry is three packed arrays — f64 accumulators (6 + S + 1 rows:
+    emissions, energy, work, throttled, demand, suspended_s, then
+    time-on-slice columns), f64 dynamics (duty, migrating_s), and i32
+    state (slice, migrate_target, dwell, migrations, suspended) — so the
+    step has few fusion roots (see module docstring).
+
+    Returns the final carry tuple (+ optional (T, N) power/served series).
+    """
+    T, N = demand.shape
+    S = tabs.n_slices
+    decide = _DECIDERS[spec[0]]
+    suspend_r = spec[0] == "suspend_resume"
+    (sb, spg, rb, rpg, cpg, dpg, ratio, default_bw, extra) = mig
+
+    # rolling _PEAK_WINDOW demand max (ContainerState.recent_peak) —
+    # only the energy variant's idle-migration rule reads it;
+    # zero-padding is exact because demand >= 0 and the window includes
+    # the current interval
+    if spec[0] == "cc" and spec[1] == "energy" and spec[2]:
+        pad = jnp.zeros((_PEAK_WINDOW - 1, N), dtype=demand.dtype)
+        dpad = jnp.concatenate([pad, demand], axis=0)
+        peak_mat = demand
+        for k in range(1, _PEAK_WINDOW):
+            peak_mat = jnp.maximum(peak_mat,
+                                   lax.dynamic_slice_in_dim(
+                                       dpad, _PEAK_WINDOW - 1 - k, T,
+                                       axis=0))
+    else:
+        peak_mat = jnp.zeros((T, 1), dtype=jnp.float64)
+
+    # per-interval power budgets (policy._budget_batch, hoisted);
+    # SuspendResumePolicy compares emission rates instead, so its budget
+    # row carries the (1-eps)*target rate threshold
+    cmat2 = cmat if cmat.ndim == 2 else cmat[:, None]
+    if spec[0] == "agnostic":
+        budget_mat = jnp.zeros((T, 1), dtype=jnp.float64)
+    elif suspend_r:
+        budget_mat = jnp.broadcast_to((1.0 - eps) * targets, (T, N))
+    else:
+        c_safe = jnp.where(cmat2 <= 0.0, 1.0, cmat2)
+        budget_mat = jnp.where(cmat2 <= 0.0, jnp.inf,
+                               (1.0 - eps[None, :]) * targets[None, :]
+                               * 1000.0 / c_safe)
+        budget_mat = jnp.broadcast_to(budget_mat, (T, N))
+
+    tos_cols = jnp.arange(S + 1, dtype=jnp.int32)
+    acc0 = jnp.zeros((_ACC_ROWS, N), dtype=jnp.float64)
+    dynf0 = jnp.stack([jnp.ones(N, dtype=jnp.float64),       # duty
+                       jnp.zeros(N, dtype=jnp.float64)])     # migrating_s
+    dyni0 = jnp.concatenate(
+        [jnp.stack([jnp.full(N, tabs.baseline_idx, dtype=jnp.int32),
+                    jnp.full(N, -1, dtype=jnp.int32),    # migrate_target
+                    jnp.full(N, 10 ** 6, dtype=jnp.int32),  # dwell
+                    jnp.zeros(N, dtype=jnp.int32),       # migrations
+                    jnp.zeros(N, dtype=jnp.int32)]),     # suspended
+         # interval counters: suspended + per-slice occupancy (exact:
+         # k * dt == dt summed k times for integral dt-multiples)
+         jnp.zeros((S + 2, N), dtype=jnp.int32)])
+
+    def step(st, x):
+        d, c, budget, peak = x
+        acc, dynf, dyni = st
+        i0 = dyni[_I_SLICE]
+        mt0 = dyni[_I_MT]
+        dwell0 = dyni[_I_DWELL]
+        sus = dyni[_I_SUS] > 0
+        duty0 = dynf[0]
+        migr_s0 = dynf[1]
+        migm = migr_s0 > 0.0
+
+        kind, dy, tg = decide(spec, tabs, i0, sus, dwell0, peak, d, c,
+                              budget)
+        kind = jnp.where(migm, -1, kind)
+        dstc = jnp.where(kind == K_MIGRATE, tg, 0)
+        dstc_m = jnp.where(migm, mt0, 0)
+        di = _pack(kind, tg, dstc, dstc_m)
+        kind, tg, dstc, dstc_m = di[0], di[1], di[2], di[3]
+
+        m_sus = kind == K_SUSPEND
+        m_res = kind == K_RESUME
+        m_stay = kind == K_STAY
+        m_mig = kind == K_MIGRATE
+
+        base_i = _lutf(tabs.base_w, i0)
+        base_dm = _lutf(tabs.base_w, dstc_m)    # in-flight migration dst
+        base_dst = _lutf(tabs.base_w, dstc)     # newly decided dst
+
+        # stop-and-copy time (MigrationCostModel, same term order incl.
+        # the zero-bandwidth fallback) + post-decision slice + duty
+        bw = jnp.maximum(_lutf(tabs.bw_gbps, i0), _lutf(tabs.bw_gbps, dstc))
+        bw = jnp.where(bw == 0.0, default_bw, bw)
+        mig_s = (sb + spg * state_gb) + (rb + rpg * state_gb)
+        mig_s = mig_s + (cpg + dpg) * state_gb
+        mig_s = mig_s + (state_gb / ratio) / bw
+        mig_s = mig_s + extra
+        duty1 = jnp.where(m_res | m_stay | m_mig, dy, duty0)
+        pf = _pack(mig_s, duty1, base_i)
+        mig_s, duty, base_i = pf[0], pf[1], pf[2]
+        has_t = m_res & (tg >= 0)
+        longm = m_mig & (mig_s >= dt)
+        subm = m_mig & ~longm
+        idx1 = jnp.where(subm | has_t, tg, i0)
+
+        # ---- plant step for running containers ----------------------
+        mult_c = _lutf(tabs.multiple, idx1)
+        base_c = _lutf(tabs.base_w, idx1)
+        peak_c = _lutf(tabs.peak_w, idx1)
+        cap = mult_c * duty                     # duty in [0,1]: clamp elided
+        srv = jnp.minimum(d, cap)
+        util = srv / mult_c
+        pw = base_c + (peak_c - base_c) * util
+        down = jnp.minimum(mig_s, dt) / dt
+        p_mig = base_i + base_dst
+        full = m_res | m_stay
+        power = jnp.where(migm, base_i + base_dm, 0.0)
+        if not srs:
+            power = jnp.where(m_sus, base_i, power)
+        power = jnp.where(longm, p_mig, power)
+        power = jnp.where(full, pw, power)
+        power = jnp.where(subm, down * p_mig + (1.0 - down) * pw, power)
+        served = jnp.where(full, srv, 0.0)
+        served = jnp.where(subm, (1.0 - down) * srv, served)
+        ps = _pack(power, served)
+        power, served = ps[0], ps[1]
+
+        # ---- fused accounting (scalar _account, reassociated) --------
+        # accumulate raw per-step sums; the loop-invariant dt/3600/1000
+        # scalings apply once after the scan. Time-on-slice and
+        # suspended time are interval *counters* (i32) scaled by dt at
+        # the end. Both reassociations shift results by ~1e-13 relative
+        # — far inside the backend's 1e-6 parity budget.
+        suspended1 = jnp.where(m_sus, True, sus)
+        suspended1 = jnp.where(m_res, False, suspended1)
+        tos_col = jnp.where(suspended1, S, idx1)
+        contribs = jnp.stack(
+            [power * c,                                 # -> emissions_g
+             power,                                     # -> energy_wh
+             served,                                    # -> work_done
+             jnp.maximum(0.0, d - served)])             # -> throttled
+        acc1 = acc + contribs
+
+        # ---- migration progress + dwell (after accounting) ----------
+        migr1 = jnp.where(longm, mig_s - dt, migr_s0)
+        migr2 = jnp.where(migm, migr1 - dt, migr1)
+        done = migm & (migr2 <= 0.0)
+        slice2 = jnp.where(done, mt0, idx1)
+        mt1 = jnp.where(longm, tg, mt0)
+        mt2 = jnp.where(done, -1, mt1)
+        dwell1 = jnp.where(subm, 0, dwell0)
+        dwell1 = jnp.where(done, 0, dwell1)
+        dwell2 = dwell1 + ((kind >= 0) & (kind != K_MIGRATE))
+        migs2 = dyni[_I_MIGS] + m_mig
+        dynf1 = jnp.stack([duty, migr2])
+        dyni1 = jnp.concatenate(
+            [jnp.stack([slice2, mt2, dwell2, migs2,
+                        suspended1.astype(jnp.int32),
+                        dyni[_I_SUSCNT] + m_sus]),       # suspended count
+             dyni[_I_SUSCNT + 1:]
+             + (tos_col[None, :] == tos_cols[:, None])])
+        ys = (power, served) if record else None
+        return (acc1, dynf1, dyni1), ys
+
+    carry, ys = lax.scan(step, (acc0, dynf0, dyni0),
+                         (demand, cmat, budget_mat, peak_mat))
+    return carry, ys
+
+
+class FleetSimulatorJax:
+    """Drop-in JAX counterpart of `FleetSimulator`: same `run` signature
+    (minus custom-policy support), same `FleetResult` out, one XLA
+    computation per (policy, shape) pair. First call per signature
+    compiles; steady-state calls are device-resident end-to-end."""
+
+    def __init__(self, family: SliceFamily, interval_s: float = 300.0,
+                 suspend_releases_slice: bool = True,
+                 migration: Optional[MigrationCostModel] = None):
+        _require_jax()
+        self.family = family
+        self.tables = family.tables()
+        self.interval_s = float(interval_s)
+        self.suspend_releases_slice = suspend_releases_slice
+        self.mig = migration or MigrationCostModel()
+        self._tabs = _TablesS.from_tables(self.tables)
+
+    def _mig_spec(self) -> tuple:
+        m = self.mig
+        return (m.suspend_base_s, m.suspend_per_gb_s, m.resume_base_s,
+                m.resume_per_gb_s, m.compress_per_gb_s,
+                m.decompress_per_gb_s, m.compression_ratio,
+                m.transfer_gbps, m.restore_extra_s)
+
+    def run(self, policy, demand, carbon, targets, epsilon=0.05,
+            state_gb=1.0, demand_scale=1.0, record: bool = False
+            ) -> FleetResult:
+        spec = _policy_spec(policy)
+        t = self.tables
+        dt = self.interval_s
+        (demand, cmat, targets, epsilon, state_gb, T, N) = \
+            _prepare_run_inputs(demand, carbon, targets, epsilon, state_gb,
+                                demand_scale, self.interval_s)
+
+        # container-parallel sharding: containers never interact, so the
+        # fleet splits into contiguous column shards dispatched to the
+        # host's XLA devices (jax dispatch is async — shards execute
+        # concurrently, one thread pool per device). Results concatenate
+        # bit-identically to the unsharded run. Multiple host devices
+        # come from XLA_FLAGS=--xla_force_host_platform_device_count=K.
+        devices = jax.devices()
+        n_sh = max(1, min(len(devices), N // _MIN_SHARD_COLS))
+        kw = dict(spec=spec, srs=self.suspend_releases_slice,
+                  record=record, tabs=self._tabs, dt=dt,
+                  mig=self._mig_spec())
+        with enable_x64():
+            outs = []
+            for s in range(n_sh):
+                lo = s * N // n_sh
+                hi = (s + 1) * N // n_sh
+                dev = devices[s]
+                cm = cmat if cmat.ndim == 1 else cmat[:, lo:hi]
+                outs.append(_fleet_scan(
+                    jax.device_put(demand[:, lo:hi], dev),
+                    jax.device_put(cm, dev),
+                    jax.device_put(targets[lo:hi], dev),
+                    jax.device_put(epsilon[lo:hi], dev),
+                    jax.device_put(state_gb[lo:hi], dev), **kw))
+            acc = np.concatenate(
+                [jax.device_get(o[0][0]) for o in outs], axis=1)
+            dyni = np.concatenate(
+                [jax.device_get(o[0][2]) for o in outs], axis=1)
+            ys = None
+            if record:
+                ys = tuple(np.concatenate(
+                    [jax.device_get(o[1][k]) for o in outs], axis=1)
+                    for k in range(2))
+
+        elapsed = float(np.cumsum(np.full(T, dt))[-1]) if T else 0.0
+        # loop-invariant scalings deferred out of the scan (see
+        # _fleet_scan's accounting note); term order mirrors _account
+        return FleetResult(
+            emissions_g=acc[0] / 1000.0 * dt / 3600.0,
+            energy_wh=acc[1] * dt / 3600.0,
+            work_done=acc[2] * dt,
+            work_demanded=demand.sum(axis=0) * dt,
+            throttled_integral=acc[3] * dt,
+            migrations=dyni[_I_MIGS].astype(np.int64),
+            suspended_s=dyni[_I_SUSCNT].astype(np.float64) * dt,
+            elapsed_s=np.full(N, elapsed),
+            time_on_slice_s=np.ascontiguousarray(
+                dyni[_I_SUSCNT + 1:].T.astype(np.float64)) * dt,
+            slice_names=t.names + ("suspended",),
+            baseline_cap=float(t.multiple[t.baseline_idx]),
+            power_series=ys[0] if record else None,
+            served_series=ys[1] if record else None,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Population sweep on the JAX path (backend="jax" in sweep_population)
+# ---------------------------------------------------------------------------
+
+def sweep_population_jax(policies: dict, family: SliceFamily, traces,
+                         carbon, targets: Sequence[float],
+                         cfg_base: SimConfig,
+                         demand_scale: float = 1.0,
+                         placement=None) -> list:
+    """JAX-backed `sweep_population`: one device-resident scan per policy
+    over all (target x trace) columns, same aggregate rows, same order,
+    as the fleet backend (parity pinned <= 1e-6 by the test suite).
+
+    With `placement`, the shared region plan is computed by the JAX
+    placement kernel (`repro.cluster.placement_jax.plan_jax`) on the
+    real n_tr-column fleet, exactly as the fleet backend does with the
+    NumPy planner.
+    """
+    _require_jax()
+
+    def _plan(eng, demand_plan):
+        from repro.cluster.placement_jax import plan_jax
+        return plan_jax(eng, demand_plan, state_gb=cfg_base.state_gb)
+
+    (demand_one, tgt_one, carbon, plan, n_tr, _) = _prepare_sweep_inputs(
+        traces, carbon, targets, cfg_base, demand_scale, placement, _plan)
+
+    sim = FleetSimulatorJax(
+        family, interval_s=cfg_base.interval_s,
+        suspend_releases_slice=cfg_base.suspend_releases_slice)
+    results = {}
+    for name, mk_policy in policies.items():
+        results[name] = (sim.run(mk_policy(), demand_one, carbon, tgt_one,
+                                 epsilon=cfg_base.epsilon,
+                                 state_gb=cfg_base.state_gb,
+                                 demand_scale=demand_scale), 0)
+    return _aggregate_sweep_rows(policies, results, targets, n_tr, plan)

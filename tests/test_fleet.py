@@ -309,6 +309,80 @@ def test_fleet_respects_slice_availability():
     assert rf.time_on_slice.get("x0.25", 0.0) == 0.0
 
 
+# ---------------------------------------------------------------------------
+# Closed-form fast paths vs the stepping loop (edge cases)
+# ---------------------------------------------------------------------------
+
+class _LoopAgnostic(CarbonAgnosticPolicy):
+    """Subclass defeats the exact-type closed-form dispatch, forcing the
+    stepping loop while keeping decide/decide_batch behaviour."""
+
+
+class _LoopSuspendResume(SuspendResumePolicy):
+    pass
+
+
+_CF_PAIRS = [("agnostic", CarbonAgnosticPolicy, _LoopAgnostic),
+             ("suspend_resume", SuspendResumePolicy, _LoopSuspendResume)]
+
+# (name, demand transform, target) edge cases: budget exhaustion (target
+# ~0 forces suspend/resume into permanent suspension), zero demand
+# (idle baseload only), and zero-carbon intensity via ConstantProvider
+_CF_CASES = [
+    ("normal", lambda d: d, 45.0),
+    ("budget_exhausted", lambda d: d, 1e-9),
+    ("zero_demand", lambda d: np.zeros_like(d), 45.0),
+    ("zero_demand_exhausted", lambda d: np.zeros_like(d), 1e-9),
+]
+
+# FleetResult array fields (PARITY_FIELDS above names scalar SimResult
+# fields; these are their per-container counterparts)
+_CF_FIELDS = ("emissions_g", "energy_wh", "work_done", "work_demanded",
+              "throttled_integral", "suspended_s", "elapsed_s",
+              "migrations")
+
+
+@pytest.mark.parametrize("case", _CF_CASES, ids=lambda c: c[0])
+@pytest.mark.parametrize("pair", _CF_PAIRS, ids=lambda p: p[0])
+@pytest.mark.parametrize("srs", [True, False], ids=["rel", "hold"])
+def test_closed_form_matches_loop_under_edge_cases(pair, case, srs):
+    """The closed-form whole-matrix path and `_loop` must agree exactly
+    (the closed-form accumulates with the stepping loop's add order) —
+    including when the budget is exhausted every interval and when
+    demand is identically zero."""
+    _, cf_policy, loop_policy = pair
+    _, transform, target = case
+    fam = paper_family()
+    demand = transform(np.stack(_traces(3, days=1), axis=1))
+    carbon = _carbon(days=1)
+    kw = dict(epsilon=0.05, state_gb=0.5)
+    sim = FleetSimulator(fam, suspend_releases_slice=srs)
+    r_cf = sim.run(cf_policy(), demand, carbon, target, **kw)
+    r_loop = sim.run(loop_policy(), demand, carbon, target, **kw)
+    for f in _CF_FIELDS:
+        a, b = getattr(r_cf, f), getattr(r_loop, f)
+        assert np.abs(np.asarray(a, dtype=np.float64)
+                      - np.asarray(b, dtype=np.float64)).max() <= 1e-9, f
+    assert np.abs(r_cf.time_on_slice_s - r_loop.time_on_slice_s).max() \
+        <= 1e-9
+
+
+def test_closed_form_zero_carbon_intensity():
+    """c = 0 means an infinite power budget: suspend/resume never
+    suspends, and both paths agree bit-for-bit."""
+    fam = paper_family()
+    demand = np.stack(_traces(2, days=1), axis=1)
+    carbon = ConstantProvider(0.0)
+    sim = FleetSimulator(fam)
+    r_cf = sim.run(SuspendResumePolicy(), demand, carbon, 45.0)
+    r_loop = sim.run(_LoopSuspendResume(), demand, carbon, 45.0)
+    assert (r_cf.suspended_s == 0.0).all()
+    for f in _CF_FIELDS:
+        a, b = getattr(r_cf, f), getattr(r_loop, f)
+        assert np.abs(np.asarray(a, dtype=np.float64)
+                      - np.asarray(b, dtype=np.float64)).max() <= 1e-9, f
+
+
 def test_fleet_heterogeneous_regions_differ():
     """Mixed-region stacked carbon traces actually flow per-container."""
     fam = paper_family()
