@@ -23,7 +23,7 @@ bench-fleet:
 # warmup_s, never gated).
 bench-gate:
 	$(PY) -m benchmarks.run \
-		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax \
+		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax,placement_sweep_pallas \
 		--fast true --json benchmarks/out/ci.json
 	$(PY) -m benchmarks.check_regression benchmarks/out/ci.json \
 		--min fleet_sweep.speedup_x=10 \
@@ -37,16 +37,32 @@ bench-gate:
 		--min placement_sweep_jax.speedup_x=1.2 \
 		--max placement_sweep_jax.parity_max_abs_diff=1e-6 \
 		--min placement_sweep_jax.assign_equal=1 \
-		--max placement_sweep_jax.over_capacity_epochs=0
+		--max placement_sweep_jax.over_capacity_epochs=0 \
+		--min placement_sweep_pallas.speedup_x=0.3 \
+		--max placement_sweep_pallas.parity_max_abs_diff=1e-6 \
+		--min placement_sweep_pallas.assign_equal=1 \
+		--max placement_sweep_pallas.over_capacity_epochs=0
 
 # Multi-region placement demo: heterogeneous fleet migrating between
 # low- and high-variability grids vs the frozen no-migration baseline
 placement:
 	$(PY) examples/simulate_regions.py --placement --fleet 120
 
-# Device-resident JAX sweep over a 10k-container placed fleet
+# The N=1M placed fleet sweep (100k traces x 10 targets, 1 day at
+# 5-minute epochs) through the memory-lean jax path, gated: throughput
+# floor on container-epochs/s, peak-RSS ceiling (the compact
+# indexed-carbon path must never materialize a (T, N) matrix — a
+# single tiled f64 matrix is ~2.3 GB, so the 4 GB ceiling catches the
+# first one; measured honest peak is ~2.3 GB), and zero capacity
+# violations. Fresh process per run so peak_rss_mb measures this entry.
 jax-sweep:
-	$(PY) examples/simulate_regions.py --jax-sweep
+	$(PY) -m benchmarks.run --only jax_sweep_scale \
+		--json benchmarks/out/jax_sweep.json
+	$(PY) -m benchmarks.check_regression benchmarks/out/jax_sweep.json \
+		--min jax_sweep_scale.n_containers=1000000 \
+		--min jax_sweep_scale.container_epochs_per_s=1000000 \
+		--max jax_sweep_scale.peak_rss_mb=4096 \
+		--max jax_sweep_scale.over_capacity_epochs=0
 
 bench:
 	$(PY) -m benchmarks.run

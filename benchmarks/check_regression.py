@@ -11,8 +11,10 @@ floor/ceiling constraints on its ``derived`` metrics, e.g.::
 A dotted path ``entry.metric`` resolves through the entry's ``derived``
 dict transparently (booleans coerce to 0/1, so ``--min x.assign_equal=1``
 pins a flag). Exits 1 when any constraint is violated and 2 when a
-referenced entry or metric is missing from the report, so a silently
-skipped benchmark also fails the job.
+referenced entry or metric is missing from the report — or present but
+not a number — so a silently skipped benchmark also fails the job.
+Every constraint is evaluated before exiting, so one missing entry does
+not mask other regressions in the same run.
 """
 
 from __future__ import annotations
@@ -22,16 +24,34 @@ import json
 import sys
 
 
+class GateError(Exception):
+    """A constraint that cannot be evaluated (missing entry/metric,
+    non-numeric value). Carries the message the gate prints."""
+
+
 def lookup(report: dict, dotted: str) -> float:
     node = report
+    seen = []
     for part in dotted.split("."):
+        derived = node.get("derived") if isinstance(node, dict) else None
         if isinstance(node, dict) and part in node:
             node = node[part]
-        elif isinstance(node, dict) and part in node.get("derived", {}):
-            node = node["derived"][part]
+        elif isinstance(derived, dict) and part in derived:
+            node = derived[part]
         else:
-            raise KeyError(dotted)
-    return float(node)
+            where = ".".join(seen) if seen else "report"
+            have = sorted(node) if isinstance(node, dict) else []
+            if isinstance(derived, dict):
+                have = sorted(set(have) | set(derived))
+            hint = f"; {where} has: {', '.join(have)}" if have else ""
+            raise GateError(
+                f"MISSING {dotted}: no {part!r} under {where}{hint}")
+        seen.append(part)
+    try:
+        return float(node)
+    except (TypeError, ValueError):
+        raise GateError(f"NOT NUMERIC {dotted}: value {node!r} cannot be "
+                        f"gated") from None
 
 
 def parse_constraint(spec: str) -> tuple[str, float]:
@@ -62,29 +82,34 @@ def main(argv: list[str] | None = None) -> int:
     )
     args = ap.parse_args(argv)
 
-    with open(args.report) as f:
-        report = json.load(f)
+    try:
+        with open(args.report) as f:
+            report = json.load(f)
+    except OSError as e:
+        print(f"UNREADABLE {args.report}: {e}")
+        return 2
+    except json.JSONDecodeError as e:
+        print(f"INVALID JSON {args.report}: {e}")
+        return 2
 
-    failures = 0
-    for path, floor in args.min:
-        try:
-            value = lookup(report, path)
-        except KeyError:
-            print(f"MISSING {path}: not in {args.report}")
-            return 2
-        ok = value >= floor
-        print(f"{'PASS' if ok else 'FAIL'} {path} = {value:g} (floor {floor:g})")
-        failures += not ok
-    for path, ceil in args.max:
-        try:
-            value = lookup(report, path)
-        except KeyError:
-            print(f"MISSING {path}: not in {args.report}")
-            return 2
-        ok = value <= ceil
-        print(f"{'PASS' if ok else 'FAIL'} {path} = {value:g} (ceiling {ceil:g})")
-        failures += not ok
+    failures = missing = 0
+    for bound, specs in (("floor", args.min), ("ceiling", args.max)):
+        for path, limit in specs:
+            try:
+                value = lookup(report, path)
+            except GateError as e:
+                print(e)
+                missing += 1
+                continue
+            ok = value >= limit if bound == "floor" else value <= limit
+            print(f"{'PASS' if ok else 'FAIL'} {path} = {value:g} "
+                  f"({bound} {limit:g})")
+            failures += not ok
 
+    if missing:
+        print(f"{missing} gated metric(s) missing from {args.report}"
+              + (f"; {failures} constraint(s) violated" if failures else ""))
+        return 2
     if failures:
         print(f"{failures} benchmark constraint(s) violated")
         return 1

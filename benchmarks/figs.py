@@ -578,6 +578,147 @@ def placement_sweep_jax(n_containers: int = 2000, days: int = 3):
     return rows, derived
 
 
+def placement_sweep_pallas(n_containers: int = 384, days: int = 2):
+    """Pallas admission-kernel dispatch check: `plan_jax` with
+    `admission_impl="pallas"` (interpret mode on CPU — the same kernel
+    Mosaic compiles on TPU/GPU) vs the NumPy planner, tight capacity so
+    every epoch exercises the ranked-admission rounds.
+
+    Headline numbers: `assign_equal` / `parity_max_abs_diff` /
+    `over_capacity_epochs` (the parity chain, same ceilings as
+    placement_sweep_jax) and `speedup_x` vs NumPy. The regression floor
+    is interpret-safe (~0.05x): interpret mode runs the kernel through
+    XLA op-by-op, so the floor gates "not pathologically slow /
+    parity intact", not kernel throughput — that needs the real
+    accelerator path.
+    """
+    from repro.carbon.intensity import TraceProvider
+    from repro.cluster.placement import PlacementConfig, PlacementEngine
+    from repro.cluster.placement_jax import plan_jax
+    from repro.cluster.slices import paper_family
+    from repro.workload.azure_like import sample_population_matrix
+
+    fam = paper_family()
+    regions = ("PL", "NL", "CAISO")
+    provs = [TraceProvider.for_region(r, hours=24 * days, seed=1)
+             for r in regions]
+    demand = sample_population_matrix(n_containers, days=days, seed=2)
+    rng = np.random.default_rng(3)
+    state_gb = rng.choice([0.25, 1.0, 4.0], size=n_containers)
+    cap = int(np.ceil(0.55 * n_containers))
+    eng = PlacementEngine(
+        fam, provs, region_names=regions,
+        config=PlacementConfig(capacity=cap, min_dwell=6, hysteresis=0.10))
+
+    plan_p, warmup_s, steady_s, plan_np, numpy_s = _steady_vs_numpy(
+        lambda: plan_jax(eng, demand, state_gb=state_gb,
+                         admission_impl="pallas"),
+        lambda: eng.plan(demand, state_gb=state_gb), reps=3)
+
+    assign_equal = bool((plan_p.assign == plan_np.assign).all())
+    parity = max(float(np.abs(plan_p.overhead_g - plan_np.overhead_g).max()),
+                 float(np.abs(plan_p.downtime_s - plan_np.downtime_s).max()),
+                 float(np.abs(plan_p.migrations - plan_np.migrations).max()))
+    occ = plan_p.occupancy()
+    rows = [{"backend": b, "wall_s": s, "n_containers": n_containers,
+             "n_epochs": demand.shape[0],
+             "migrations": int(p.migrations.sum()),
+             "overhead_g": float(p.overhead_g.sum())}
+            for b, s, p in (("numpy", numpy_s, plan_np),
+                            ("pallas", steady_s, plan_p))]
+    derived = {
+        "n_containers": n_containers,
+        "n_epochs": demand.shape[0],
+        "numpy_s": numpy_s,
+        "warmup_s": warmup_s,
+        "steady_s": steady_s,
+        "speedup_x": numpy_s / steady_s,
+        "parity_max_abs_diff": parity,
+        "assign_equal": assign_equal,
+        "over_capacity_epochs": int((occ > cap).sum()),
+    }
+    return rows, derived
+
+
+def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
+                    days: int = 1):
+    """The N=1M placed fleet sweep: n_traces x n_targets containers
+    (1,000,000 at the defaults), one day at 5-minute epochs, through the
+    full jax path — vectorized trace generation, the capacity-planned
+    region schedule (`plan_jax`), and the memory-lean indexed-carbon
+    fleet scan (compact demand + in-step target tiling; no (T, N) array
+    on host or device).
+
+    Headline numbers: `container_epochs_per_s` = N * T / steady_s
+    (steady state: second sweep call, jit cache warm), `warmup_s`
+    (first call, includes compile AND the placement plan),
+    `over_capacity_epochs` (the plan is recomputed once outside the
+    timed region for the invariant check — plans are deterministic, so
+    it is the same plan the sweep used). NumPy comparison is deliberately
+    absent: the fleet backend needs the ~2.3 GB tiled matrices and tens
+    of minutes at this N — parity is pinned at 50k by
+    tests/test_placement_scale.py instead.
+    """
+    from repro.carbon.intensity import TraceProvider
+    from repro.cluster.placement import PlacementConfig, PlacementEngine
+    from repro.cluster.placement_jax import plan_jax
+    from repro.cluster.slices import paper_family
+    from repro.core.policy import CarbonContainerPolicy
+    from repro.core.simulator import SimConfig, sweep_population
+    from repro.workload.azure_like import sample_population_matrix
+
+    fam = paper_family()
+    regions = ("PL", "NL", "CAISO")
+    provs = [TraceProvider.for_region(r, hours=24 * days, seed=1)
+             for r in regions]
+    t0 = time.perf_counter()
+    demand = sample_population_matrix(n_traces, days=days, seed=2)
+    gen_s = time.perf_counter() - t0
+    cap = int(np.ceil(0.6 * n_traces))
+    eng = PlacementEngine(
+        fam, provs, region_names=regions,
+        config=PlacementConfig(capacity=cap, min_dwell=6, hysteresis=0.10))
+    targets = list(np.linspace(20.0, 80.0, n_targets))
+    policies = {"carbon_containers":
+                lambda: CarbonContainerPolicy(variant="energy")}
+    cfg = SimConfig(target_rate=0.0)
+
+    def _sweep():
+        return sweep_population(policies, fam, demand, None, targets, cfg,
+                                backend="jax", placement=eng)
+
+    t0 = time.perf_counter()
+    rows_w = _sweep()
+    warmup_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rows_jax = _sweep()
+    steady_s = time.perf_counter() - t0
+
+    plan = plan_jax(eng, demand, state_gb=cfg.state_gb)
+    occ = plan.occupancy()
+    n_containers = n_traces * n_targets
+    T = demand.shape[0]
+    rows = [{"backend": "jax", "wall_s": steady_s,
+             "n_containers": n_containers, "n_epochs": T,
+             **{k: r[k] for k in ("policy", "target", "carbon_rate_mean",
+                                  "throttle_mean", "migrations_mean")}}
+            for r in rows_jax]
+    derived = {
+        "n_containers": n_containers,
+        "n_traces": n_traces,
+        "n_targets": n_targets,
+        "n_epochs": T,
+        "gen_s": gen_s,
+        "warmup_s": warmup_s,
+        "steady_s": steady_s,
+        "container_epochs_per_s": n_containers * T / steady_s,
+        "placement_migrations": int(plan.migrations.sum()),
+        "over_capacity_epochs": int((occ > cap).sum()),
+        "rows_match_warmup": rows_jax == rows_w,
+    }
+    return rows, derived
+
+
 def fig17_server_time(n_jobs: int = 30):
     rows, _ = fig15_16_variants(n_jobs)
     out = []

@@ -7,21 +7,37 @@ benchmarks/out/ as CSV for plotting). Run:
         [--only fleet_sweep,fleet_sweep_jax] [--fast true] [--json out.json]
 
 ``--only`` takes a comma-separated entry list; ``--json`` additionally
-writes per-entry ``{us_per_call, wall_s, warmup_s, steady_s, derived}``
-to the given path (the CI benchmark-regression gate feeds this to
-benchmarks.check_regression). ``wall_s`` is the entry's total wall-clock;
-entries that jit-compile (the ``*_jax`` ones) report ``warmup_s`` (first
-call, includes compile) and ``steady_s`` (best steady-state call)
-separately, and their ``speedup_x`` metrics are computed from steady
-state only — so jit compile time never pollutes regression floors.
+writes per-entry ``{us_per_call, wall_s, warmup_s, steady_s,
+peak_rss_mb, derived}`` to the given path (the CI benchmark-regression
+gate feeds this to benchmarks.check_regression). ``wall_s`` is the
+entry's total wall-clock; entries that jit-compile (the ``*_jax`` ones)
+report ``warmup_s`` (first call, includes compile) and ``steady_s``
+(best steady-state call) separately, and their ``speedup_x`` metrics
+are computed from steady state only — so jit compile time never
+pollutes regression floors. ``peak_rss_mb`` is the process peak-RSS
+high-water mark at entry end; memory gates (the jax-sweep target's
+ceiling) run their entry with ``--only`` in a fresh process so the mark
+is theirs alone.
 """
 from __future__ import annotations
 
 import csv
 import json
 import os
+import resource
 import sys
 import time
+
+
+def _peak_rss_mb() -> float:
+    """Process peak RSS in MB (ru_maxrss is KB on Linux, bytes on
+    macOS). A high-water mark: per-entry values are cumulative across
+    the run, so memory gates should run their entry with ``--only`` in
+    a fresh process (the Makefile's jax-sweep target does)."""
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":                       # pragma: no cover
+        return rss / 1e6
+    return rss / 1024.0
 
 def _ensure_xla_flags():
     """CPU-tuned XLA flags for the jax-backend entries (the shared
@@ -77,6 +93,13 @@ def main() -> None:
          {"days": 2 if fast else 3}),
         ("placement_sweep_jax", figs.placement_sweep_jax,
          {"days": 2 if fast else 3}),
+        # pallas admission kernel (interpret on CPU) parity + floor
+        ("placement_sweep_pallas", figs.placement_sweep_pallas,
+         {"n_containers": 256 if fast else 384, "days": 2}),
+        # the N=1M placed sweep (fast mode: same path, 6k containers)
+        ("jax_sweep_scale", figs.jax_sweep_scale,
+         {"n_traces": 1500, "n_targets": 4} if fast
+         else {"n_traces": 100_000, "n_targets": 10}),
     ]
     only = args.get("only")
     only_set = set(only.split(",")) if only else None
@@ -101,6 +124,7 @@ def main() -> None:
             "wall_s": us / 1e6,
             "warmup_s": derived.get("warmup_s"),
             "steady_s": derived.get("steady_s"),
+            "peak_rss_mb": _peak_rss_mb(),
             "derived": derived,
         }
         compact = json.dumps({k: (round(v, 4) if isinstance(v, float) else v)

@@ -183,14 +183,18 @@ def jax_sweep(n_containers: int = 10080, n_targets: int = 12,
     from repro.core.policy import CarbonContainerPolicy
     from repro.core.simulator import SimConfig, sweep_population
 
+    from repro.workload.azure_like import sample_population_matrix
+
     n_traces = n_containers // n_targets
     fam = paper_family()
     regions = ("PL", "NL", "CAISO")
     provs = [TraceProvider.for_region(r, hours=24 * days, seed=1)
              for r in regions]
-    traces = [t.util for t in sample_population(n_traces, days=days,
-                                                seed=3)]
-    T = len(traces[0])
+    # (T, n_traces) matrix straight through the sweep — the vectorized
+    # generator is what makes 100k-trace fleets feasible (make jax-sweep
+    # runs this same path at N=1M via benchmarks.run)
+    traces = sample_population_matrix(n_traces, days=days, seed=3)
+    T = traces.shape[0]
     cap = int(np.ceil(0.6 * n_traces))
     eng = PlacementEngine(
         fam, provs, interval_s=INTERVAL_S, region_names=regions,

@@ -12,18 +12,44 @@ one `jax.lax.scan` over epochs:
   - capacity admission runs the same preference rounds as the NumPy
     kernel inside a `lax.while_loop` bounded at R rounds, with the NumPy
     loop's early exit (a round that wants nothing or denies nothing ends
-    the loop — further rounds would be no-ops) and a `lax.cond` fast
-    path that skips rank materialization when every request fits; note
+    the loop — further rounds would be no-ops); the round carry is two
+    packed int32 vectors (dst + a denied-region strike bitmask) plus the
+    (R,) free-slot counters, so no (N, R) tensor outlives a round; note
     the data-dependent trip count means the planner is not
     reverse-differentiable as-is — switch to a fixed-trip fori_loop
     first if you need gradients through admission;
   - one host->device push of (cmat, demand, cost0, mig_s), one pull of
-    the final carry + the (T, N) assignment matrix.
+    the final carry + the (T, N) int32 assignment matrix.
+
+Why the ranked admission is the one hot path XLA handles badly
+--------------------------------------------------------------
+Admission is a *sequential contention loop*: container i wins region r
+iff fewer than ``remaining[r]`` wanters of r precede it in index order.
+The pure-XLA rendering (``admission_impl="xla"``) ranks wanters with a
+global ``lax.associative_scan`` over the (N, R) one-hot request matrix —
+an O(N R log N) multi-pass tree whose log N intermediate (N, R) stages
+each round-trip through memory; on XLA:CPU (no multi-output loop
+fusion, see `repro.core.fleet_jax`) the surrounding argmax/strike chain
+is then re-materialized per stage, and a ``lax.cond`` fast path that
+skips ranking when every request fits only helps uncontended epochs.
+The Pallas kernel (``admission_impl="pallas"``,
+`repro.cluster.placement_pallas`) instead streams container blocks
+through a grid with per-region "wanters seen so far" counters in SMEM —
+rank becomes counter + in-block prefix count, and the whole round is
+one O(N R) pass with the argmax, ranking, admission, and strike fused
+in a single kernel. ``"auto"`` picks pallas on TPU/GPU and the XLA
+rendering on CPU, where pallas runs in interpret mode (correct and
+parity-tested, but built from the same XLA ops it is meant to replace).
 
 The result is the same `PlacementPlan` dataclass; parity against the
 NumPy planner is pinned to 1e-6 (assignments equal epoch-by-epoch) by
-`tests/test_placement_jax.py`, and the NumPy planner stays pinned
-bit-compatible to the greedy scalar reference, anchoring the chain.
+`tests/test_placement_jax.py` for both admission impls (pallas in
+interpret mode), and the NumPy planner stays pinned bit-compatible to
+the greedy scalar reference, anchoring the chain.
+
+Degenerate shapes short-circuit before tracing: an empty fleet (N=0), a
+single region (R=1, where no container can ever move), or an empty
+horizon (T=0) return the trivial plan without compiling the scan.
 """
 from __future__ import annotations
 
@@ -43,6 +69,8 @@ except ImportError:                                    # pragma: no cover
     HAS_JAX = False
     jax = jnp = lax = enable_x64 = None
 
+ADMISSION_IMPLS = ("auto", "xla", "pallas")
+
 
 def _require_jax():
     if not HAS_JAX:
@@ -59,15 +87,49 @@ def _sel_region(c_row, idx, R: int):
     return out
 
 
+def _admission_round_xla(net, assign, eligible, dst, struck, remaining,
+                         rows_r):
+    """One preference round, pure-XLA: associative-scan ranking with a
+    `lax.cond` fast path for uncontended rounds. Same (dst, struck,
+    want_total) contract as `placement_pallas.admission_round`."""
+    cols = rows_r[None, :]
+    net_eff = jnp.where(((struck[:, None] >> cols) & 1) > 0, -jnp.inf, net)
+    best = jnp.argmax(net_eff, axis=1).astype(jnp.int32)
+    net_best = jnp.max(net_eff, axis=1)
+    want = eligible & (dst < 0) & (net_best > 0.0) & (best != assign)
+    onehot = want[:, None] & (best[:, None] == cols)
+    counts = onehot.sum(axis=0, dtype=jnp.int32)
+
+    def admit_all(_):
+        return onehot
+
+    def admit_ranked(_):
+        rank = lax.associative_scan(jnp.add, onehot.astype(jnp.int32),
+                                    axis=0)
+        return onehot & (rank <= remaining[None, :])
+
+    adm = lax.cond(jnp.all(counts <= remaining), admit_all, admit_ranked,
+                   None)
+    admitted = adm.any(axis=1)
+    dst = jnp.where(admitted, best, dst)
+    denied = want & ~admitted
+    struck = jnp.where(denied, struck | (1 << best), struck)
+    return dst, struck, counts
+
+
 @partial(jax.jit if HAS_JAX else lambda f, **kw: f,
          static_argnames=("R", "min_dwell", "has_cap", "base_b", "span_b",
-                          "mult_b", "h_hr", "hk"))
+                          "mult_b", "h_hr", "hk", "admission_impl",
+                          "block_n", "interpret"))
 def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s, *, R: int,
                min_dwell: int, has_cap: bool, base_b: float, span_b: float,
-               mult_b: float, h_hr: float, hk: float):
+               mult_b: float, h_hr: float, hk: float,
+               admission_impl: str = "xla", block_n: int = 8192,
+               interpret: bool = True):
     """One XLA computation for the whole planning horizon. Mirrors
     `PlacementEngine.plan` term-for-term (see its docstring for the
-    decision model)."""
+    decision model). `admission_impl` here is already resolved to
+    "xla" or "pallas" (`plan_jax` resolves "auto")."""
     N = demand.shape[1]
     rows_r = jnp.arange(R, dtype=jnp.int32)
 
@@ -92,9 +154,10 @@ def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s, *, R: int,
             # preference rounds, bounded at R like the NumPy kernel and
             # with its early exit (a round with nothing wanted or
             # nothing denied ends the loop — extra rounds would be
-            # no-ops). Ranks are only materialized when some region
-            # actually overflows; the common all-admitted epoch skips
-            # the prefix scan entirely.
+            # no-ops). The round carry is packed int32 (dst + strike
+            # bitmask); `net` stays round-invariant and denied choices
+            # accumulate in the bitmask, so admitted(r) ==
+            # min(want_total[r], remaining[r]) closes the counters.
             remaining0 = cap - occ
 
             def round_cond(rst):
@@ -102,38 +165,28 @@ def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s, *, R: int,
                 return cont & (rnd < R)
 
             def round_body(rst):
-                net_r, dst_r, remaining_r, rnd, _ = rst
-                best = jnp.argmax(net_r, axis=1).astype(jnp.int32)
-                net_best = jnp.max(net_r, axis=1)
-                want = (eligible & (dst_r < 0) & (net_best > 0.0)
-                        & (best != assign))
-                onehot = want[:, None] & (best[:, None] == rows_r[None, :])
-                counts = onehot.sum(axis=0, dtype=jnp.int32)
-
-                def admit_all(_):
-                    return onehot
-
-                def admit_ranked(_):
-                    rank = lax.associative_scan(
-                        jnp.add, onehot.astype(jnp.int32), axis=0)
-                    return onehot & (rank <= remaining_r[None, :])
-
-                adm = lax.cond(jnp.all(counts <= remaining_r),
-                               admit_all, admit_ranked, None)
-                admitted = adm.any(axis=1)
-                dst_r = jnp.where(admitted, best, dst_r)
-                remaining_r = remaining_r - adm.sum(axis=0,
-                                                    dtype=jnp.int32)
-                denied = want & ~admitted
-                net_r = jnp.where(onehot & denied[:, None], -jnp.inf,
-                                  net_r)
-                cont = jnp.any(want) & jnp.any(denied)
-                return (net_r, dst_r, remaining_r, rnd + 1, cont)
+                dst_r, struck_r, remaining_r, rnd, _ = rst
+                if admission_impl == "pallas":
+                    from repro.cluster.placement_pallas import \
+                        admission_round
+                    dst_r, struck_r, want_tot = admission_round(
+                        net, assign, eligible, dst_r, struck_r,
+                        remaining_r, block_n=block_n, interpret=interpret)
+                else:
+                    dst_r, struck_r, want_tot = _admission_round_xla(
+                        net, assign, eligible, dst_r, struck_r,
+                        remaining_r, rows_r)
+                admitted_tot = jnp.minimum(want_tot, remaining_r)
+                remaining_n = remaining_r - admitted_tot
+                cont = (jnp.any(want_tot > 0)
+                        & jnp.any(want_tot > admitted_tot))
+                return (dst_r, struck_r, remaining_n, rnd + 1, cont)
 
             dst0 = jnp.full(N, -1, dtype=jnp.int32)
-            net, dst, remaining, _, _ = lax.while_loop(
+            struck0 = jnp.zeros(N, dtype=jnp.int32)
+            dst, _, remaining, _, _ = lax.while_loop(
                 round_cond, round_body,
-                (net, dst0, remaining0, jnp.int32(0), jnp.bool_(True)))
+                (dst0, struck0, remaining0, jnp.int32(0), jnp.bool_(True)))
 
         moved = dst >= 0
         dst_c = jnp.where(moved, dst, 0)
@@ -163,17 +216,50 @@ def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s, *, R: int,
     return carry, assign_mat
 
 
-def plan_jax(engine, demand, state_gb: float = 1.0,
-             initial=None) -> PlacementPlan:
+def _trivial_plan(engine, cmat, assign0) -> PlacementPlan:
+    """Plan for shapes where no move is ever possible (N=0, R=1, T=0):
+    every epoch keeps the initial assignment, zero overhead."""
+    T = cmat.shape[0]
+    N = assign0.shape[0]
+    return PlacementPlan(
+        assign=np.broadcast_to(assign0, (T, N)).copy(),
+        migrations=np.zeros(N, dtype=np.int64),
+        overhead_g=np.zeros(N, dtype=np.float64),
+        downtime_s=np.zeros(N, dtype=np.float64),
+        region_intensity=cmat,
+        region_names=engine.region_names,
+        initial=assign0.copy())
+
+
+def plan_jax(engine, demand, state_gb: float = 1.0, initial=None,
+             admission_impl: str = "auto",
+             block_n: int = 8192) -> PlacementPlan:
     """Device-resident counterpart of `PlacementEngine.plan`: same
     inputs, same `PlacementPlan` out, one jit-compiled scan per shape.
-    Parity with the NumPy planner is pinned to 1e-6 (and the planner to
-    the scalar reference at 1e-9) by the test suite."""
+
+    `admission_impl` selects the capacity-admission kernel: `"xla"`
+    (associative-scan ranking), `"pallas"` (streaming Pallas kernel,
+    interpret mode on CPU; `block_n` containers per grid step), or
+    `"auto"` — pallas on TPU/GPU, xla on CPU (see module docstring).
+    Both are pinned to the NumPy planner by the parity suite (and the
+    planner to the scalar reference at 1e-9).
+    """
     _require_jax()
+    if admission_impl not in ADMISSION_IMPLS:
+        raise ValueError(f"admission_impl must be one of {ADMISSION_IMPLS}, "
+                         f"got {admission_impl!r}")
     demand, cmat, cap, assign0, mig_s, cost0 = engine._prep(
         demand, state_gb, initial)
     T, N = demand.shape
     R = engine.n_regions
+    if N == 0 or R == 1 or T == 0:
+        # nothing can ever move: N=0 has no containers, R=1 has no
+        # destination (argmax == current region always), T=0 no epochs —
+        # skip tracing/compiling the round loop entirely
+        return _trivial_plan(engine, cmat, assign0)
+    if admission_impl == "auto":
+        from repro.cluster.placement_pallas import default_interpret
+        admission_impl = "xla" if default_interpret() else "pallas"
     t = engine.tables
     b = t.baseline_idx
     base_b = float(t.base_w[b])
@@ -189,6 +275,11 @@ def plan_jax(engine, demand, state_gb: float = 1.0,
     cap_host = (cap.astype(np.int32) if has_cap
                 else np.zeros(R, dtype=np.int32))
 
+    interpret = True
+    if admission_impl == "pallas":
+        from repro.cluster.placement_pallas import default_interpret
+        interpret = default_interpret()
+
     with enable_x64():
         carry, assign_mat = _plan_scan(
             jnp.asarray(cmat), jnp.asarray(demand),
@@ -197,7 +288,9 @@ def plan_jax(engine, demand, state_gb: float = 1.0,
             jnp.asarray(cost0), jnp.asarray(mig_s),
             R=R, min_dwell=int(cfg.min_dwell), has_cap=has_cap,
             base_b=base_b, span_b=span_b, mult_b=mult_b,
-            h_hr=float(h_hr), hk=float(hk))
+            h_hr=float(h_hr), hk=float(hk),
+            admission_impl=admission_impl, block_n=int(block_n),
+            interpret=interpret)
         (_, _, migrations, overhead_g, downtime_s, _) = jax.device_get(carry)
         assign_mat = jax.device_get(assign_mat)
 

@@ -1,0 +1,166 @@
+"""Pallas admission kernel for the placement preference rounds.
+
+One preference round of the capacity-admission step (see
+`repro.cluster.placement`) is a *sequential contention loop*: container i
+is admitted to its best region r iff fewer than ``remaining[r]`` wanters
+of r precede it in container-index order. The XLA port ranks wanters
+with a global ``lax.associative_scan`` over the full (N, R) one-hot
+matrix — a multi-pass O(N R log N) tree that materializes rank
+intermediates and defeats fusion on CPU (see the `placement_jax` module
+docstring). This is exactly the shape Pallas exists for: the whole round
+is a *single streaming pass* when per-region "wanters seen so far"
+counters ride along the container axis.
+
+Kernel layout (``admission_round``):
+
+  - grid over container blocks, sequential (``dimension_semantics=
+    ("arbitrary",)``) so scratch carries across blocks;
+  - per-region wanter counters in SMEM scratch — the only cross-block
+    state, (R,) int32;
+  - per block: recompute the round's argmax-preference from the epoch's
+    (B, R) net tile and the packed strike bitmask, rank each wanter as
+    ``seen[r] + in-block prefix count``, admit iff rank <=
+    ``remaining[r]`` (the round-start snapshot — identical to the NumPy
+    kernel, which decrements per region *after* each region's cumsum),
+    and strike denied choices into the bitmask;
+  - the per-round carry is two packed int32 vectors (dst, struck) — no
+    (N, R) tensor survives the round.
+
+The denial/early-exit bookkeeping needs only the per-region wanter
+totals: admitted(r) == min(want_total[r], remaining[r]) because
+admission takes exactly the first ``remaining[r]`` wanters. The final
+block publishes the SMEM counters as the (R,) ``want_total`` output.
+
+dtype is taken from ``net``: float64 under `enable_x64` on CPU (the
+parity-anchored interpret path), float32 on TPU/GPU where f64 is
+unavailable — the accelerator path trades the 1e-6 parity anchor for
+bit-exact *assignment* parity at f32-safe nets, like the rest of the
+kernels in `repro.kernels`. ``interpret=None`` resolves to interpret
+mode unless the default JAX backend is an accelerator, mirroring the
+flash_attention/ssd_scan CPU-fallback idiom.
+"""
+from __future__ import annotations
+
+import functools
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    HAS_PALLAS = True
+except ImportError:                                    # pragma: no cover
+    HAS_PALLAS = False
+    jax = jnp = pl = pltpu = None
+
+DEFAULT_BLOCK = 8192     # containers per grid step (f64 net tile: 192KB at R=3)
+
+
+def _compiler_params(dimension_semantics):
+    """Version-portable pltpu compiler params (the class was renamed
+    across jax releases); shared with the model kernels."""
+    from repro.kernels.pallas_compat import compiler_params
+    return compiler_params(dimension_semantics)
+
+
+def _round_kernel(net_ref, assign_ref, elig_ref, dst_ref, struck_ref,
+                  remaining_ref, dst_out_ref, struck_out_ref, want_out_ref,
+                  seen_ref, *, R: int, B: int, N: int, NB: int):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        seen_ref[...] = jnp.zeros_like(seen_ref)
+
+    net = net_ref[...]                       # (B, R) epoch net, round-invariant
+    assign = assign_ref[...]                 # (B,)  current region
+    elig = elig_ref[...] > 0                 # (B,)  dwell >= min_dwell
+    dst = dst_ref[...]                       # (B,)  -1 = still unplaced
+    struck = struck_ref[...]                 # (B,)  denied-region bitmask
+    remaining = remaining_ref[...]           # (R,)  round-start free slots
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (B, R), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (B, R), 1)
+    valid = (b * B + rows[:, 0]) < N         # mask the ragged last block
+
+    # argmax preference over un-struck regions; strict > keeps the first
+    # max on ties, matching np.argmax (R is small and static)
+    neg = jnp.asarray(-jnp.inf, net.dtype)
+    net_eff = jnp.where(((struck[:, None] >> cols) & 1) > 0, neg, net)
+    best = jnp.zeros(assign.shape, jnp.int32)
+    net_best = net_eff[:, 0]
+    for r in range(1, R):
+        m = net_eff[:, r] > net_best
+        best = jnp.where(m, r, best)
+        net_best = jnp.where(m, net_eff[:, r], net_best)
+
+    want = valid & elig & (dst < 0) & (net_best > 0.0) & (best != assign)
+    onehot = want[:, None] & (best[:, None] == cols)
+    # ranked admission: global inclusive rank = carried wanter count +
+    # in-block prefix count; the first `remaining[r]` wanters win
+    prefix = jnp.cumsum(onehot.astype(jnp.int32), axis=0)
+    seen = seen_ref[...]
+    admit = onehot & (seen[None, :] + prefix <= remaining[None, :])
+    admitted = admit.any(axis=1)
+    dst_out_ref[...] = jnp.where(admitted, best, dst)
+    denied = want & ~admitted
+    struck_out_ref[...] = jnp.where(denied, struck | (1 << best), struck)
+    seen_ref[...] = seen + prefix[-1]
+
+    @pl.when(b == NB - 1)
+    def _publish():
+        want_out_ref[...] = seen_ref[...]
+
+
+def default_interpret() -> bool:
+    """Interpret (CPU-fallback) mode unless running on an accelerator."""
+    return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+
+
+def admission_round(net, assign, eligible, dst, struck, remaining, *,
+                    block_n: int = DEFAULT_BLOCK, interpret=None):
+    """One capacity-admission preference round as a single streaming pass.
+
+    Inputs: ``net`` (N, R) epoch net-saving table; ``assign``/(N,) i32
+    current regions; ``eligible`` (N,) i32/bool dwell gate; ``dst`` (N,)
+    i32 round carry (-1 = unplaced); ``struck`` (N,) i32 denied-region
+    bitmask carry; ``remaining`` (R,) i32 round-start free slots.
+
+    Returns ``(dst', struck', want_total)`` with ``want_total`` (R,) i32
+    the number of containers that requested each region this round —
+    enough for the caller to update ``remaining`` (admitted ==
+    min(want_total, remaining)) and evaluate the NumPy kernel's
+    early-exit rule without touching (N, R) state.
+    """
+    N, R = net.shape
+    if interpret is None:
+        interpret = default_interpret()
+    B = min(block_n, max(N, 1))
+    NB = max(1, -(-N // B))
+    kernel = functools.partial(_round_kernel, R=R, B=B, N=N, NB=NB)
+    elig_i = eligible.astype(jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=(NB,),
+        in_specs=[
+            pl.BlockSpec((B, R), lambda b: (b, 0)),
+            pl.BlockSpec((B,), lambda b: (b,)),
+            pl.BlockSpec((B,), lambda b: (b,)),
+            pl.BlockSpec((B,), lambda b: (b,)),
+            pl.BlockSpec((B,), lambda b: (b,)),
+            pl.BlockSpec((R,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B,), lambda b: (b,)),
+            pl.BlockSpec((B,), lambda b: (b,)),
+            pl.BlockSpec((R,), lambda b: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),      # dst'
+            jax.ShapeDtypeStruct((N,), jnp.int32),      # struck'
+            jax.ShapeDtypeStruct((R,), jnp.int32),      # want_total
+        ],
+        scratch_shapes=[pltpu.SMEM((R,), jnp.int32)],
+        compiler_params=_compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(net, assign, elig_i, dst, struck, remaining)

@@ -616,23 +616,34 @@ class BlockPolicy:
 # ---------------------------------------------------------------------------
 
 def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
-                          placement, plan_fn):
+                          placement, plan_fn, tile: bool = True):
     """Shared sweep prologue for the fleet and jax backends (one
     implementation so the two can never drift on what sweeps they
     accept): stack the equal-length traces into the policy-block demand
     matrix, tile targets, and — with a placement engine — compute the
     shared region plan on the real n_tr-column fleet via `plan_fn` and
     substitute the planned per-container carbon matrix. Returns
-    (demand_one, tgt_one, carbon, plan, n_tr, n_tg)."""
-    traces = [np.asarray(tr, dtype=np.float64) for tr in traces]
-    lengths = {len(tr) for tr in traces}
-    if len(lengths) != 1:
-        raise ValueError("fleet backend needs equal-length traces; "
-                         f"got lengths {sorted(lengths)}")
-    n_tr = len(traces)
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg).
+
+    With ``tile=False`` (the jax backend's memory-lean placed sweep)
+    the demand matrix stays compact — (T, n_tr), NOT target-tiled —
+    and the planned carbon matrix is not materialized (``carbon`` comes
+    back as None; the caller feeds the plan's indexed form to the
+    simulator instead). At the N=1M target (n_tr=100k x n_tg=10,
+    T=288) the tiled (T, N) f64 matrices are ~2.3 GB apiece on the
+    host; the compact path never builds them."""
+    if isinstance(traces, np.ndarray) and traces.ndim == 2:
+        stack = np.asarray(traces, dtype=np.float64)   # (T, n_tr) direct
+    else:
+        traces = [np.asarray(tr, dtype=np.float64) for tr in traces]
+        lengths = {len(tr) for tr in traces}
+        if len(lengths) != 1:
+            raise ValueError("fleet backend needs equal-length traces; "
+                             f"got lengths {sorted(lengths)}")
+        stack = np.stack(traces, axis=1)               # (T, n_tr)
+    n_tr = stack.shape[1]
     n_tg = len(targets)
-    stack = np.stack(traces, axis=1)                   # (T, n_tr)
-    demand_one = np.tile(stack, (1, n_tg))             # (T, n_tr*n_tg)
+    demand_one = np.tile(stack, (1, n_tg)) if tile else stack
     tgt_one = np.repeat(np.asarray(targets, dtype=np.float64), n_tr)
 
     plan = None
@@ -648,7 +659,8 @@ def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
                 np.asarray(demand_scale) != 1.0):
             demand_plan = stack * demand_scale
         plan = plan_fn(placement, demand_plan)
-        carbon = np.tile(plan.carbon_matrix(), (1, n_tg))
+        carbon = (np.tile(plan.carbon_matrix(), (1, n_tg)) if tile
+                  else None)
     return demand_one, tgt_one, carbon, plan, n_tr, n_tg
 
 

@@ -444,14 +444,13 @@ _DECIDERS = {"agnostic": _decide_agnostic, "suspend_resume": _decide_sr,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit if HAS_JAX else lambda f, **kw: f,
-         static_argnames=("spec", "srs", "record", "tabs", "dt", "mig"))
+         static_argnames=("spec", "srs", "record", "tabs", "dt", "mig",
+                          "cmode", "n_rep", "R"))
 def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
                 srs: bool, record: bool, tabs: _TablesS, dt: float,
-                mig: tuple):
-    """One XLA computation: precompute the rolling demand peaks and the
-    per-interval power budgets (both hoisted exactly as the NumPy loop
-    hoists them), then scan the staged epoch step over time. `cmat` is
-    (T,) or (T, N).
+                mig: tuple, cmode: str = "dense", n_rep: int = 1,
+                R: int = 0):
+    """One XLA computation: scan the staged epoch step over time.
 
     The carry is three packed arrays — f64 accumulators (6 + S + 1 rows:
     emissions, energy, work, throttled, demand, suspended_s, then
@@ -459,44 +458,48 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
     state (slice, migrate_target, dwell, migrations, suspended) — so the
     step has few fusion roots (see module docstring).
 
+    Scale hardening (the N=1M placed sweep): nothing (T, N)-shaped is
+    hoisted. The per-interval power budgets and the rolling
+    _PEAK_WINDOW demand max — previously precomputed as (T, N)
+    matrices, 2.3 GB each at N=1M/T=288 f64 — are computed inside the
+    step (the budget is elementwise in the epoch's carbon row; the peak
+    reads a (W-1, N) demand-window carry). Both are the exact same
+    float expressions as the hoisted forms, so backend parity is
+    untouched.
+
+    `cmode` selects the carbon layout: "dense" takes `cmat` as the
+    (T,) or (T, N) intensity matrix; "indexed" takes `cmat` as a
+    `(region_mat (T, R) f64, codes (T, n_cols) int32)` pair and derives
+    each epoch's per-container intensity with an R-way select chain —
+    at fleet scale the (T, N) f64 matrix becomes a (T, n_cols) int32
+    code matrix. `n_rep > 1` (indexed mode only) tiles the compact
+    demand/code columns n_rep times *inside the step*, for
+    target-sweep fleets whose columns repeat the same traces: the
+    logical fleet is N = n_cols * n_rep wide but only compact inputs
+    ever exist on host or in HBM.
+
     Returns the final carry tuple (+ optional (T, N) power/served series).
     """
-    T, N = demand.shape
+    if cmode == "indexed":
+        region_mat, codes = cmat
+        n_cols = demand.shape[1]
+        N = n_cols * n_rep
+    else:
+        assert n_rep == 1, "n_rep tiling requires indexed carbon"
+        N = demand.shape[1]
     S = tabs.n_slices
     decide = _DECIDERS[spec[0]]
     suspend_r = spec[0] == "suspend_resume"
     (sb, spg, rb, rpg, cpg, dpg, ratio, default_bw, extra) = mig
 
-    # rolling _PEAK_WINDOW demand max (ContainerState.recent_peak) —
-    # only the energy variant's idle-migration rule reads it;
-    # zero-padding is exact because demand >= 0 and the window includes
-    # the current interval
-    if spec[0] == "cc" and spec[1] == "energy" and spec[2]:
-        pad = jnp.zeros((_PEAK_WINDOW - 1, N), dtype=demand.dtype)
-        dpad = jnp.concatenate([pad, demand], axis=0)
-        peak_mat = demand
-        for k in range(1, _PEAK_WINDOW):
-            peak_mat = jnp.maximum(peak_mat,
-                                   lax.dynamic_slice_in_dim(
-                                       dpad, _PEAK_WINDOW - 1 - k, T,
-                                       axis=0))
-    else:
-        peak_mat = jnp.zeros((T, 1), dtype=jnp.float64)
-
-    # per-interval power budgets (policy._budget_batch, hoisted);
-    # SuspendResumePolicy compares emission rates instead, so its budget
-    # row carries the (1-eps)*target rate threshold
-    cmat2 = cmat if cmat.ndim == 2 else cmat[:, None]
-    if spec[0] == "agnostic":
-        budget_mat = jnp.zeros((T, 1), dtype=jnp.float64)
-    elif suspend_r:
-        budget_mat = jnp.broadcast_to((1.0 - eps) * targets, (T, N))
-    else:
-        c_safe = jnp.where(cmat2 <= 0.0, 1.0, cmat2)
-        budget_mat = jnp.where(cmat2 <= 0.0, jnp.inf,
-                               (1.0 - eps[None, :]) * targets[None, :]
-                               * 1000.0 / c_safe)
-        budget_mat = jnp.broadcast_to(budget_mat, (T, N))
+    # only the energy variant's idle-migration rule reads the rolling
+    # demand peak (ContainerState.recent_peak); others skip the window
+    # carry entirely
+    use_peak = spec[0] == "cc" and spec[1] == "energy" and spec[2]
+    # SuspendResumePolicy compares emission rates: its (epoch-invariant)
+    # budget is the (1-eps)*target rate threshold, hoisted once
+    sr_budget = ((1.0 - eps) * targets if suspend_r
+                 else jnp.zeros((), dtype=jnp.float64))
 
     tos_cols = jnp.arange(S + 1, dtype=jnp.int32)
     acc0 = jnp.zeros((_ACC_ROWS, N), dtype=jnp.float64)
@@ -511,10 +514,44 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
          # interval counters: suspended + per-slice occupancy (exact:
          # k * dt == dt summed k times for integral dt-multiples)
          jnp.zeros((S + 2, N), dtype=jnp.int32)])
+    # zero-padded demand window (rolling peak includes the current
+    # interval; exact because demand >= 0)
+    win0 = (jnp.zeros((_PEAK_WINDOW - 1, N), dtype=jnp.float64)
+            if use_peak else None)
 
     def step(st, x):
-        d, c, budget, peak = x
-        acc, dynf, dyni = st
+        if cmode == "indexed":
+            d, code, c_row = x
+            # R-way select chain over the epoch's (R,) region row — the
+            # compact-width analogue of gathering region_mat[t, codes[t]]
+            c = jnp.full(code.shape, c_row[0], dtype=jnp.float64)
+            for r in range(1, R):
+                c = jnp.where(code == r, c_row[r], c)
+            if n_rep > 1:
+                d = jnp.tile(d, n_rep)
+                c = jnp.tile(c, n_rep)
+        else:
+            d, c = x
+        if use_peak:
+            acc, dynf, dyni, win = st
+            peak = d
+            for k in range(_PEAK_WINDOW - 1):
+                peak = jnp.maximum(peak, win[k])
+            win1 = jnp.concatenate([win[1:], d[None, :]], axis=0)
+        else:
+            acc, dynf, dyni = st
+            peak = jnp.zeros((), dtype=jnp.float64)
+        # per-interval power budget (policy._budget_batch, elementwise
+        # in the epoch's carbon values — same floats as the hoisted
+        # (T, N) form)
+        if spec[0] == "agnostic":
+            budget = jnp.zeros((), dtype=jnp.float64)
+        elif suspend_r:
+            budget = sr_budget
+        else:
+            c_safe = jnp.where(c <= 0.0, 1.0, c)
+            budget = jnp.where(c <= 0.0, jnp.inf,
+                               (1.0 - eps) * targets * 1000.0 / c_safe)
         i0 = dyni[_I_SLICE]
         mt0 = dyni[_I_MT]
         dwell0 = dyni[_I_DWELL]
@@ -613,11 +650,16 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
              dyni[_I_SUSCNT + 1:]
              + (tos_col[None, :] == tos_cols[:, None])])
         ys = (power, served) if record else None
-        return (acc1, dynf1, dyni1), ys
+        st1 = ((acc1, dynf1, dyni1, win1) if use_peak
+               else (acc1, dynf1, dyni1))
+        return st1, ys
 
-    carry, ys = lax.scan(step, (acc0, dynf0, dyni0),
-                         (demand, cmat, budget_mat, peak_mat))
-    return carry, ys
+    st0 = ((acc0, dynf0, dyni0, win0) if use_peak
+           else (acc0, dynf0, dyni0))
+    xs = ((demand, codes, region_mat) if cmode == "indexed"
+          else (demand, cmat))
+    carry, ys = lax.scan(step, st0, xs)
+    return carry[:3], ys
 
 
 class FleetSimulatorJax:
@@ -645,14 +687,56 @@ class FleetSimulatorJax:
                 m.transfer_gbps, m.restore_extra_s)
 
     def run(self, policy, demand, carbon, targets, epsilon=0.05,
-            state_gb=1.0, demand_scale=1.0, record: bool = False
-            ) -> FleetResult:
+            state_gb=1.0, demand_scale=1.0, record: bool = False,
+            n_rep: int = 1) -> FleetResult:
+        """Advance the fleet; same contract as `FleetSimulator.run`, plus
+        the memory-lean indexed-carbon form: `carbon` may be a
+        ``(region_mat (T, R), codes (T, n_cols) int)`` pair — a
+        placement plan's region-intensity table plus per-epoch region
+        codes — in which case `demand` is the compact (T, n_cols)
+        matrix and ``n_rep`` tiles its columns inside the scan step to
+        the logical fleet width N = n_cols * n_rep (targets/epsilon/
+        state_gb are full-N). No (T, N) array exists on host or device.
+        """
         spec = _policy_spec(policy)
         t = self.tables
         dt = self.interval_s
-        (demand, cmat, targets, epsilon, state_gb, T, N) = \
-            _prepare_run_inputs(demand, carbon, targets, epsilon, state_gb,
-                                demand_scale, self.interval_s)
+        indexed = isinstance(carbon, tuple)
+        if indexed:
+            region_mat, codes = carbon
+            demand = np.asarray(demand, dtype=np.float64)
+            if demand.ndim != 2:
+                raise ValueError("indexed-carbon run needs (T, n_cols) "
+                                 "demand")
+            if demand_scale is not None and np.any(
+                    np.asarray(demand_scale) != 1.0):
+                demand = demand * demand_scale
+            if demand.size and demand.min() < 0.0:
+                raise ValueError("fleet demand must be non-negative")
+            T, n_cols = demand.shape
+            N = n_cols * int(n_rep)
+            region_mat = np.asarray(region_mat, dtype=np.float64)
+            codes = np.asarray(codes, dtype=np.int32)
+            if region_mat.ndim != 2 or region_mat.shape[0] != T:
+                raise ValueError(f"region matrix shape {region_mat.shape}"
+                                 f" does not match demand (T={T})")
+            if codes.shape != (T, n_cols):
+                raise ValueError(f"region codes shape {codes.shape} does "
+                                 f"not match demand {(T, n_cols)}")
+            R = region_mat.shape[1]
+            targets = np.broadcast_to(
+                np.asarray(targets, dtype=np.float64), (N,))
+            epsilon = np.broadcast_to(
+                np.asarray(epsilon, dtype=np.float64), (N,))
+            state_gb = np.broadcast_to(
+                np.asarray(state_gb, dtype=np.float64), (N,))
+        else:
+            if n_rep != 1:
+                raise ValueError("n_rep tiling requires indexed carbon")
+            (demand, cmat, targets, epsilon, state_gb, T, N) = \
+                _prepare_run_inputs(demand, carbon, targets, epsilon,
+                                    state_gb, demand_scale, self.interval_s)
+            R = 0
 
         # container-parallel sharding: containers never interact, so the
         # fleet splits into contiguous column shards dispatched to the
@@ -660,24 +744,44 @@ class FleetSimulatorJax:
         # concurrently, one thread pool per device). Results concatenate
         # bit-identically to the unsharded run. Multiple host devices
         # come from XLA_FLAGS=--xla_force_host_platform_device_count=K.
+        # Indexed runs shard over rep blocks (the compact columns are
+        # shared, so column shards would re-push them per device anyway).
         devices = jax.devices()
-        n_sh = max(1, min(len(devices), N // _MIN_SHARD_COLS))
+        if indexed:
+            n_sh = max(1, min(len(devices), int(n_rep),
+                              N // _MIN_SHARD_COLS or 1))
+        else:
+            n_sh = max(1, min(len(devices), N // _MIN_SHARD_COLS))
         kw = dict(spec=spec, srs=self.suspend_releases_slice,
                   record=record, tabs=self._tabs, dt=dt,
                   mig=self._mig_spec())
         with enable_x64():
             outs = []
             for s in range(n_sh):
-                lo = s * N // n_sh
-                hi = (s + 1) * N // n_sh
                 dev = devices[s]
-                cm = cmat if cmat.ndim == 1 else cmat[:, lo:hi]
-                outs.append(_fleet_scan(
-                    jax.device_put(demand[:, lo:hi], dev),
-                    jax.device_put(cm, dev),
-                    jax.device_put(targets[lo:hi], dev),
-                    jax.device_put(epsilon[lo:hi], dev),
-                    jax.device_put(state_gb[lo:hi], dev), **kw))
+                if indexed:
+                    lo_r = s * n_rep // n_sh
+                    hi_r = (s + 1) * n_rep // n_sh
+                    lo, hi = lo_r * n_cols, hi_r * n_cols
+                    cm = (jax.device_put(region_mat, dev),
+                          jax.device_put(codes, dev))
+                    dm = jax.device_put(demand, dev)
+                    outs.append(_fleet_scan(
+                        dm, cm,
+                        jax.device_put(targets[lo:hi], dev),
+                        jax.device_put(epsilon[lo:hi], dev),
+                        jax.device_put(state_gb[lo:hi], dev),
+                        cmode="indexed", n_rep=hi_r - lo_r, R=R, **kw))
+                else:
+                    lo = s * N // n_sh
+                    hi = (s + 1) * N // n_sh
+                    cm = cmat if cmat.ndim == 1 else cmat[:, lo:hi]
+                    outs.append(_fleet_scan(
+                        jax.device_put(demand[:, lo:hi], dev),
+                        jax.device_put(cm, dev),
+                        jax.device_put(targets[lo:hi], dev),
+                        jax.device_put(epsilon[lo:hi], dev),
+                        jax.device_put(state_gb[lo:hi], dev), **kw))
             acc = np.concatenate(
                 [jax.device_get(o[0][0]) for o in outs], axis=1)
             dyni = np.concatenate(
@@ -689,13 +793,16 @@ class FleetSimulatorJax:
                     for k in range(2))
 
         elapsed = float(np.cumsum(np.full(T, dt))[-1]) if T else 0.0
+        work_dem = demand.sum(axis=0) * dt
+        if indexed and n_rep > 1:
+            work_dem = np.tile(work_dem, n_rep)
         # loop-invariant scalings deferred out of the scan (see
         # _fleet_scan's accounting note); term order mirrors _account
         return FleetResult(
             emissions_g=acc[0] / 1000.0 * dt / 3600.0,
             energy_wh=acc[1] * dt / 3600.0,
             work_done=acc[2] * dt,
-            work_demanded=demand.sum(axis=0) * dt,
+            work_demanded=work_dem,
             throttled_integral=acc[3] * dt,
             migrations=dyni[_I_MIGS].astype(np.int64),
             suspended_s=dyni[_I_SUSCNT].astype(np.float64) * dt,
@@ -717,7 +824,8 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                          carbon, targets: Sequence[float],
                          cfg_base: SimConfig,
                          demand_scale: float = 1.0,
-                         placement=None) -> list:
+                         placement=None,
+                         admission_impl: str = "auto") -> list:
     """JAX-backed `sweep_population`: one device-resident scan per policy
     over all (target x trace) columns, same aggregate rows, same order,
     as the fleet backend (parity pinned <= 1e-6 by the test suite).
@@ -725,16 +833,31 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
     With `placement`, the shared region plan is computed by the JAX
     placement kernel (`repro.cluster.placement_jax.plan_jax`) on the
     real n_tr-column fleet, exactly as the fleet backend does with the
-    NumPy planner.
+    NumPy planner — and the sweep takes the memory-lean path: compact
+    (T, n_tr) demand plus the plan's (region_intensity, assign-codes)
+    indexed carbon, tiled to the logical n_tr*n_tg fleet *inside* the
+    scan step, so no (T, N) matrix is ever materialized (the fleet
+    backend's tiled form is ~2.3 GB per matrix at N=1M). The indexed
+    select reproduces the gathered matrix bit-exactly, so sweep parity
+    with the fleet backend is unchanged. `admission_impl` is forwarded
+    to `plan_jax` ("auto" | "xla" | "pallas").
     """
     _require_jax()
 
     def _plan(eng, demand_plan):
         from repro.cluster.placement_jax import plan_jax
-        return plan_jax(eng, demand_plan, state_gb=cfg_base.state_gb)
+        return plan_jax(eng, demand_plan, state_gb=cfg_base.state_gb,
+                        admission_impl=admission_impl)
 
-    (demand_one, tgt_one, carbon, plan, n_tr, _) = _prepare_sweep_inputs(
-        traces, carbon, targets, cfg_base, demand_scale, placement, _plan)
+    compact = placement is not None
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg) = \
+        _prepare_sweep_inputs(traces, carbon, targets, cfg_base,
+                              demand_scale, placement, _plan,
+                              tile=not compact)
+    n_rep = 1
+    if compact:
+        carbon = (plan.region_intensity, plan.assign.astype(np.int32))
+        n_rep = n_tg
 
     sim = FleetSimulatorJax(
         family, interval_s=cfg_base.interval_s,
@@ -744,5 +867,6 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
         results[name] = (sim.run(mk_policy(), demand_one, carbon, tgt_one,
                                  epsilon=cfg_base.epsilon,
                                  state_gb=cfg_base.state_gb,
-                                 demand_scale=demand_scale), 0)
+                                 demand_scale=demand_scale,
+                                 n_rep=n_rep), 0)
     return _aggregate_sweep_rows(policies, results, targets, n_tr, plan)

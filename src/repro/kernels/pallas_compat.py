@@ -1,0 +1,16 @@
+"""Version portability for Pallas TPU compiler params.
+
+The params class was renamed across jax releases
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``); referencing
+either name directly breaks on the other side of the rename (an
+AttributeError at trace time, even in interpret mode). Every
+``pl.pallas_call`` in this repo routes through this helper instead.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(dimension_semantics: tuple):
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics)

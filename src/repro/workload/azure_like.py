@@ -94,9 +94,96 @@ def sample_population(n_vms: int = 1000, days: int = 7,
     return out
 
 
-def population_stats(traces: list) -> dict:
-    covs = np.array([t.cov for t in traces])
-    means = np.array([t.mean for t in traces])
+def _draw_targets_matrix(rng, n):
+    """(n,)-vectorized `_draw_targets`: same mean distribution, same CoV
+    bucket mixture (searchsorted over the cumulative bucket probs is the
+    cumulative-acceptance loop)."""
+    means = np.clip(np.exp(rng.normal(np.log(0.13), 1.0, n)), 0.005, 0.9)
+    edges = np.cumsum([p for _, p in _COV_BUCKETS])
+    b = np.minimum(np.searchsorted(edges, rng.random(n), side="left"),
+                   len(_COV_BUCKETS) - 1)
+    lo = np.array([rng_lo for (rng_lo, _), _ in _COV_BUCKETS])[b]
+    hi = np.array([rng_hi for (_, rng_hi), _ in _COV_BUCKETS])[b]
+    return means, rng.uniform(lo, hi)
+
+
+def _gen_series_block(rng, T, means, covs):
+    """(T, n) block of AR(1)+burst series, vectorized over the VM axis.
+
+    Statistically identical construction to `_gen_series` (same process
+    parameters, same clipped fixed-point recalibration), but every
+    per-VM Python loop is replaced by array ops: the AR(1) recursion
+    runs over T (288 steps/day) instead of T*n, and bursts are scattered
+    with a difference-array cumsum instead of per-burst slice writes.
+    RNG draw *order* differs from the scalar generator, so individual
+    traces differ for the same seed — the population statistics (what
+    the Azure calibration tests pin) do not.
+    """
+    n = means.size
+    rho = 0.97
+    sigma = np.maximum(covs, 0.02)                       # (n,)
+    sig_eps = sigma * np.sqrt(1 - rho ** 2)
+    scale = np.ones(n)
+    out = np.empty((T, n))
+    done = np.zeros(n, dtype=bool)
+    for _ in range(4):                       # fixed-point on clipped stats
+        eps = rng.normal(0.0, 1.0, (T, n)) * sig_eps
+        x = np.zeros((T, n))
+        for i in range(1, T):
+            x[i] = rho * x[i - 1] + eps[i]
+        # bursts via difference-array: +amp at start, -amp at end, cumsum
+        counts = rng.poisson(T / 600, n)
+        tot = int(counts.sum())
+        vm = np.repeat(np.arange(n), counts)
+        starts = rng.integers(0, T, tot)
+        lens = rng.integers(3, 24, tot)
+        amps = rng.uniform(1.0, 3.0, tot) * sigma[vm]
+        bd = np.zeros((T + 1, n))
+        np.add.at(bd, (starts, vm), amps)
+        np.add.at(bd, (np.minimum(starts + lens, T), vm), -amps)
+        burst = np.cumsum(bd[:-1], axis=0)
+        series = np.clip(
+            means * scale * np.exp(x - 0.5 * sigma ** 2 + burst), 0.0, 1.0)
+        fresh = ~done
+        out[:, fresh] = series[:, fresh]
+        got = series.mean(axis=0)
+        done |= np.abs(got - means) / np.maximum(means, 1e-9) < 0.05
+        if done.all():
+            break
+        scale = np.where(done, scale,
+                         scale * means / np.maximum(got, 1e-9))
+    return out
+
+
+def sample_population_matrix(n_vms: int = 1000, days: int = 7,
+                             seed: int = 0,
+                             chunk: int = 20000) -> np.ndarray:
+    """Vectorized `sample_population`: returns the (T, n_vms) demand
+    matrix directly, generated in VM chunks so peak scratch stays a few
+    (T, chunk) arrays regardless of fleet size. This is what makes the
+    N=1M sweep's 100k-trace population feasible — the per-VM scalar
+    generator walks ~T*n_vms*4 Python loop iterations (minutes at 100k
+    VMs), the matrix path is pure array code (~seconds).
+    """
+    rng = np.random.default_rng(seed)
+    T = int(days * 24 * 3600 / INTERVAL_S)
+    out = np.empty((T, n_vms))
+    for lo in range(0, n_vms, chunk):
+        hi = min(lo + chunk, n_vms)
+        means, covs = _draw_targets_matrix(rng, hi - lo)
+        out[:, lo:hi] = _gen_series_block(rng, T, means, covs)
+    return out
+
+
+def population_stats(traces) -> dict:
+    """Calibration stats for a population: a `sample_population` list of
+    VMTrace or a `sample_population_matrix` (T, N) matrix."""
+    if isinstance(traces, np.ndarray):
+        means = traces.mean(axis=0)
+        covs = traces.std(axis=0) / np.maximum(means, 1e-9)
+    else:
+        covs = np.array([t.cov for t in traces])
+        means = np.array([t.mean for t in traces])
     return {
         "frac_cov_below_0.25": float((covs < 0.25).mean()),
         "frac_cov_above_0.4": float((covs > 0.4).mean()),

@@ -49,6 +49,22 @@ def test_workload_population_matches_azure_stats():
     assert abs(stats["frac_mean_below_0.10"] - 0.43) < 0.12
 
 
+def test_workload_matrix_generator_matches_azure_stats():
+    """The (N,)-vectorized generator must hit the same calibration
+    windows as the per-VM scalar one (it feeds the N=1M sweep, where
+    the scalar generator's Python loops are infeasible)."""
+    from repro.workload.azure_like import sample_population_matrix
+
+    mat = sample_population_matrix(1000, days=3, seed=0)
+    assert mat.shape == (3 * 288, 1000)
+    assert mat.min() >= 0.0 and mat.max() <= 1.0
+    stats = population_stats(mat)
+    assert abs(stats["frac_cov_below_0.25"] - 0.08) < 0.08
+    assert stats["frac_cov_above_0.4"] > 0.5
+    assert abs(stats["frac_cov_above_1.0"] - 0.30) < 0.10
+    assert abs(stats["frac_mean_below_0.10"] - 0.43) < 0.12
+
+
 def test_power_model_calibration():
     truth = LinearPowerModel(100.0, 200.0)
     utils = np.linspace(0, 1, 20)

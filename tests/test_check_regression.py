@@ -1,0 +1,99 @@
+"""The benchmark-regression gate must fail *usefully*: a missing entry,
+a missing metric, or a None/non-numeric value exits 2 with a message
+naming the path (regression: these used to escape as KeyError /
+TypeError tracebacks), and one missing entry must not mask real
+constraint violations elsewhere in the same report."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.check_regression import GateError, lookup, main  # noqa: E402
+
+REPORT = {
+    "fleet_sweep": {
+        "us_per_call": 1000.0,
+        "warmup_s": None,
+        "derived": {"speedup_x": 12.0, "assign_equal": True},
+    },
+}
+
+
+def _write(tmp_path, obj):
+    p = tmp_path / "report.json"
+    p.write_text(json.dumps(obj))
+    return str(p)
+
+
+def test_lookup_resolves_through_derived():
+    assert lookup(REPORT, "fleet_sweep.speedup_x") == 12.0
+    assert lookup(REPORT, "fleet_sweep.us_per_call") == 1000.0
+    assert lookup(REPORT, "fleet_sweep.assign_equal") == 1.0
+
+
+def test_lookup_missing_entry_names_path():
+    with pytest.raises(GateError, match="MISSING nope.speedup_x"):
+        lookup(REPORT, "nope.speedup_x")
+
+
+def test_lookup_missing_metric_lists_available():
+    with pytest.raises(GateError, match="speedup_x"):
+        lookup(REPORT, "fleet_sweep.nope")
+
+
+def test_lookup_none_is_not_numeric():
+    with pytest.raises(GateError, match="NOT NUMERIC"):
+        lookup(REPORT, "fleet_sweep.warmup_s")
+
+
+def test_pass_exit_0(tmp_path, capsys):
+    rp = _write(tmp_path, REPORT)
+    assert main([rp, "--min", "fleet_sweep.speedup_x=10"]) == 0
+    assert "PASS" in capsys.readouterr().out
+
+
+def test_violation_exit_1(tmp_path, capsys):
+    rp = _write(tmp_path, REPORT)
+    assert main([rp, "--min", "fleet_sweep.speedup_x=100"]) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_missing_entry_exit_2(tmp_path, capsys):
+    rp = _write(tmp_path, REPORT)
+    assert main([rp, "--min", "placement_sweep.speedup_x=1"]) == 2
+    out = capsys.readouterr().out
+    assert "MISSING placement_sweep.speedup_x" in out
+    assert "Traceback" not in out
+
+
+def test_none_metric_exit_2(tmp_path, capsys):
+    rp = _write(tmp_path, REPORT)
+    assert main([rp, "--max", "fleet_sweep.warmup_s=5"]) == 2
+    assert "NOT NUMERIC fleet_sweep.warmup_s" in capsys.readouterr().out
+
+
+def test_missing_does_not_mask_violations(tmp_path, capsys):
+    rp = _write(tmp_path, REPORT)
+    code = main([rp,
+                 "--min", "gone.speedup_x=1",
+                 "--min", "fleet_sweep.speedup_x=100"])
+    assert code == 2
+    out = capsys.readouterr().out
+    assert "MISSING gone.speedup_x" in out
+    assert "FAIL fleet_sweep.speedup_x" in out
+
+
+def test_unreadable_report_exit_2(tmp_path, capsys):
+    assert main([str(tmp_path / "absent.json"),
+                 "--min", "a.b=1"]) == 2
+    assert "UNREADABLE" in capsys.readouterr().out
+
+
+def test_invalid_json_exit_2(tmp_path, capsys):
+    p = tmp_path / "bad.json"
+    p.write_text("{not json")
+    assert main([str(p), "--min", "a.b=1"]) == 2
+    assert "INVALID JSON" in capsys.readouterr().out

@@ -1,0 +1,72 @@
+"""Large-N smoke lane for the placed sweep (slow).
+
+The fast-lane parity tests pin the admission semantics at N~20; this
+lane re-checks them where the scale hardening actually matters — a
+50k-container capacity-planned fleet — and then pushes the same fleet
+through the memory-lean jax sweep end-to-end. Admission invariants:
+
+  - occupancy never exceeds the configured per-region capacity, and
+  - the jax planner's per-epoch admission counts (occupancy) match the
+    NumPy planner's *exactly* — a single divergent admission would
+    cascade through dwell and capacity state for the rest of the plan.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.carbon.intensity import TraceProvider  # noqa: E402
+from repro.cluster.placement import PlacementConfig, PlacementEngine  # noqa: E402
+from repro.cluster.placement_jax import plan_jax  # noqa: E402
+from repro.cluster.slices import paper_family  # noqa: E402
+from repro.core.policy import CarbonContainerPolicy  # noqa: E402
+from repro.core.simulator import SimConfig, sweep_population  # noqa: E402
+from repro.workload.azure_like import sample_population_matrix  # noqa: E402
+
+N_TRACES = 50_000
+REGIONS = ("PL", "NL", "CAISO")
+
+
+@pytest.fixture(scope="module")
+def placed_50k():
+    provs = [TraceProvider.for_region(r, hours=24, seed=1)
+             for r in REGIONS]
+    demand = sample_population_matrix(N_TRACES, days=1, seed=4)
+    cap = int(np.ceil(0.6 * N_TRACES))
+    eng = PlacementEngine(
+        paper_family(), provs, region_names=REGIONS,
+        config=PlacementConfig(capacity=cap, min_dwell=6, hysteresis=0.10))
+    return eng, demand, cap
+
+
+@pytest.mark.slow
+def test_admission_counts_match_numpy_at_50k(placed_50k):
+    eng, demand, cap = placed_50k
+    p_np = eng.plan(demand, state_gb=1.0)
+    p_j = plan_jax(eng, demand, state_gb=1.0)
+    occ_np, occ_j = p_np.occupancy(), p_j.occupancy()
+    assert (occ_j <= cap).all(), "admission exceeded capacity"
+    assert np.array_equal(occ_np, occ_j), \
+        "jax admission counts diverge from NumPy"
+    # the full assignment matrix too — occupancy equality alone could
+    # mask swapped containers
+    assert np.array_equal(p_np.assign, p_j.assign)
+    # a 50k fleet under 60% capacity must actually migrate
+    assert int(p_j.migrations.sum()) > 0
+
+
+@pytest.mark.slow
+def test_placed_sweep_runs_memory_lean_at_50k(placed_50k):
+    """The compact indexed-carbon sweep completes at N=50k and emits
+    finite aggregates for every (policy, target) row."""
+    eng, demand, _ = placed_50k
+    cfg = SimConfig(target_rate=0.0)
+    rows = sweep_population(
+        {"cc": lambda: CarbonContainerPolicy(variant="energy")},
+        paper_family(), demand, None, [30.0, 60.0], cfg,
+        backend="jax", placement=eng)
+    assert len(rows) == 2
+    for r in rows:
+        assert np.isfinite(r["carbon_rate_mean"])
+        assert np.isfinite(r["throttle_mean"])
+        assert r["placement_migrations_mean"] >= 0.0
