@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test bench-fleet bench bench-gate placement jax-sweep
+.PHONY: test-fast test bench-fleet bench bench-gate placement jax-sweep traffic
 
 # Fast lane: carbon-core + fleet + placement tests (seconds, no JAX
 # model compiles)
@@ -23,7 +23,7 @@ bench-fleet:
 # warmup_s, never gated).
 bench-gate:
 	$(PY) -m benchmarks.run \
-		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax,placement_sweep_pallas \
+		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax,placement_sweep_pallas,traffic_sweep \
 		--fast true --json benchmarks/out/ci.json
 	$(PY) -m benchmarks.check_regression benchmarks/out/ci.json \
 		--min fleet_sweep.speedup_x=10 \
@@ -41,12 +41,25 @@ bench-gate:
 		--min placement_sweep_pallas.speedup_x=0.3 \
 		--max placement_sweep_pallas.parity_max_abs_diff=1e-6 \
 		--min placement_sweep_pallas.assign_equal=1 \
-		--max placement_sweep_pallas.over_capacity_epochs=0
+		--max placement_sweep_pallas.over_capacity_epochs=0 \
+		--min traffic_sweep.n_users=1000000 \
+		--min traffic_sweep.speedup_x=3 \
+		--max traffic_sweep.parity_max_abs_diff=1e-9 \
+		--max traffic_sweep.cpr_ratio=0.9 \
+		--max traffic_sweep.viol_rate_delta=0 \
+		--max traffic_sweep.over_capacity_epochs=0 \
+		--max traffic_sweep.sweep_parity_max_abs_diff=1e-6
 
 # Multi-region placement demo: heterogeneous fleet migrating between
 # low- and high-variability grids vs the frozen no-migration baseline
 placement:
 	$(PY) examples/simulate_regions.py --placement --fleet 120
+
+# Carbon-aware traffic demo: 1M-user diurnal request population routed
+# by carbon intensity under an SLO bound, replica fleets autoscaled
+# under a carbon cap, demand modulation through the placed fleet sweep
+traffic:
+	$(PY) examples/traffic_demo.py
 
 # The N=1M placed fleet sweep (100k traces x 10 targets, 1 day at
 # 5-minute epochs) through the memory-lean jax path, gated: throughput

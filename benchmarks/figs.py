@@ -647,7 +647,10 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     full jax path — vectorized trace generation, the capacity-planned
     region schedule (`plan_jax`), and the memory-lean indexed-carbon
     fleet scan (compact demand + in-step target tiling; no (T, N) array
-    on host or device).
+    on host or device) — with the carbon-aware traffic subsystem folded
+    into the same scan: a 1M-user request population is routed and
+    autoscaled per epoch and modulates every container's demand, all on
+    (R,)-shaped carries, so the 4 GB RSS ceiling still holds.
 
     Headline numbers: `container_epochs_per_s` = N * T / steady_s
     (steady state: second sweep call, jit cache warm), `warmup_s`
@@ -665,6 +668,8 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     from repro.cluster.slices import paper_family
     from repro.core.policy import CarbonContainerPolicy
     from repro.core.simulator import SimConfig, sweep_population
+    from repro.traffic import TrafficConfig, UserPopulation
+    from repro.traffic.autoscale import ReplicaConfig
     from repro.workload.azure_like import sample_population_matrix
 
     fam = paper_family()
@@ -682,10 +687,14 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     policies = {"carbon_containers":
                 lambda: CarbonContainerPolicy(variant="energy")}
     cfg = SimConfig(target_rate=0.0)
+    traffic = TrafficConfig(
+        population=UserPopulation(n_users=1_000_000, n_regions=3, seed=3),
+        replicas=ReplicaConfig(max_replicas=8, max_step=4))
 
     def _sweep():
         return sweep_population(policies, fam, demand, None, targets, cfg,
-                                backend="jax", placement=eng)
+                                backend="jax", placement=eng,
+                                traffic=traffic)
 
     t0 = time.perf_counter()
     rows_w = _sweep()
@@ -715,6 +724,11 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
         "placement_migrations": int(plan.migrations.sum()),
         "over_capacity_epochs": int((occ > cap).sum()),
         "rows_match_warmup": rows_jax == rows_w,
+        "traffic_n_users": traffic.population.n_users,
+        "traffic_served": rows_jax[0]["traffic_served"],
+        "traffic_violation_rate": rows_jax[0]["traffic_violation_rate"],
+        "traffic_carbon_per_request_g":
+            rows_jax[0]["traffic_carbon_per_request_g"],
     }
     return rows, derived
 
@@ -737,3 +751,123 @@ def fig17_server_time(n_jobs: int = 30):
     derived = {"perf_more_time_on_large": float(np.mean(big.get("performance", [0])))
                >= float(np.mean(big.get("energy", [0])))}
     return out, derived
+
+
+# ---------------------------------------------------------------------------
+# Carbon-aware traffic subsystem: routing speedup, carbon-vs-latency
+# headline, end-to-end sweep parity
+# ---------------------------------------------------------------------------
+
+def traffic_sweep(n_users: int = 1_000_000, days: int = 1,
+                  n_traces: int = 16):
+    """The traffic subsystem's benchmark-gate entry.
+
+    Three claims in one scenario (a 1M-user population across three
+    regions 8 time-zone-hours apart, so every pair is SLO-feasible at
+    the 200 ms bound and both routing policies violate nothing):
+
+      - `speedup_x` / `parity_max_abs_diff`: the vectorized router vs
+        the pure-Python reference on the same (T, R) request tensor
+        (expected bit-identical — both fold admission sums left to
+        right).
+      - `cpr_ratio`: carbon routing must beat latency routing on
+        carbon-per-request at an equal (zero) SLO-violation rate
+        (`viol_rate_delta`); `over_capacity_epochs` pins the router's
+        capacity invariant.
+      - `sweep_parity_max_abs_diff`: `sweep_population(..., traffic=)`
+        through the fleet backend (NumPy demand modulation) vs the jax
+        backend (routing + autoscaling folded into the fleet scan),
+        including the traffic_* row metrics.
+    """
+    from repro.carbon.intensity import TraceProvider
+    from repro.cluster.placement import PlacementConfig, PlacementEngine
+    from repro.cluster.slices import paper_family
+    from repro.core.policy import CarbonContainerPolicy
+    from repro.core.simulator import SimConfig, sweep_population
+    from repro.traffic import (RoutingConfig, TrafficConfig, UserPopulation,
+                               request_matrix, route, route_scalar,
+                               simulate_traffic)
+    from repro.traffic.autoscale import ReplicaConfig
+    from repro.workload.azure_like import sample_population
+
+    T = 288 * days
+    regions = ("PL", "NL", "CAISO")
+    provs = [TraceProvider.for_region(r, hours=24 * days, seed=1)
+             for r in regions]
+    epochs_s = np.arange(T) * 300.0
+    intensity = np.stack([p.intensity_series(epochs_s) for p in provs],
+                         axis=1)
+    pop = UserPopulation(n_users=n_users, n_regions=3,
+                         tz_offset_h=(0.0, 8.0, 16.0), seed=3)
+    reps = ReplicaConfig(throughput_rps=100.0, max_replicas=8, max_step=4)
+    slo_ms = 200.0                  # all pairs at 140 ms: zero violations
+
+    t0 = time.perf_counter()
+    arr = request_matrix(pop, T, 300.0)
+    gen_s = time.perf_counter() - t0
+    cap = reps.max_capacity(300.0)
+    lat = TrafficConfig(population=pop).latency_matrix()
+    rcfg = RoutingConfig(slo_ms=slo_ms, policy="carbon")
+
+    rt_vec, vec_s, rt_scl, scl_s = _best_of_interleaved(
+        lambda: route(arr.requests, cap, intensity, lat, rcfg),
+        lambda: route_scalar(arr.requests, cap, intensity, lat, rcfg),
+        rounds=3)
+    parity = max(float(np.max(np.abs(getattr(rt_vec, f)
+                                     - getattr(rt_scl, f))))
+                 for f in ("flows", "routed", "dropped", "violations"))
+
+    # carbon vs latency routing, end to end through the autoscaler
+    res_pol = {}
+    for pol in ("carbon", "latency"):
+        cfg_t = TrafficConfig(population=pop, replicas=reps,
+                              routing=RoutingConfig(slo_ms=slo_ms,
+                                                    policy=pol))
+        res_pol[pol] = simulate_traffic(arr.requests, intensity, cfg_t)
+    rc, rl = res_pol["carbon"], res_pol["latency"]
+    over_cap = int(np.sum(rc.routed > cap * (1.0 + 1e-9)))
+
+    # end-to-end sweep: fleet (NumPy modulation) vs jax (in-scan fold)
+    fam = paper_family()
+    traces = [t.util for t in sample_population(n_traces, days=days,
+                                                seed=5)]
+    eng = PlacementEngine(fam, provs, region_names=regions,
+                          config=PlacementConfig(capacity=n_traces,
+                                                 min_dwell=6))
+    pols = {"carbon_containers":
+            lambda: CarbonContainerPolicy(variant="energy")}
+    cfg = SimConfig(target_rate=0.0)
+    tc = TrafficConfig(population=pop, replicas=reps,
+                       routing=RoutingConfig(slo_ms=slo_ms))
+    sweep_kw = dict(placement=eng, traffic=tc)
+    rows_f = sweep_population(pols, fam, traces, None, [30.0, 60.0], cfg,
+                              backend="fleet", **sweep_kw)
+    rows_j = sweep_population(pols, fam, traces, None, [30.0, 60.0], cfg,
+                              backend="jax", **sweep_kw)
+    keys = ("carbon_rate_mean", "throttle_mean", "migrations_mean",
+            "traffic_served", "traffic_carbon_per_request_g",
+            "traffic_slo_violations")
+    sweep_parity = max(abs(a[k] - b[k]) / max(abs(a[k]), 1.0)
+                       for a, b in zip(rows_f, rows_j) for k in keys)
+
+    rows = [{"routing": pol, "offered": r.offered_total,
+             "served": r.served_total, "dropped": r.dropped_total,
+             "slo_violations": r.violation_total,
+             "emissions_g": r.emissions_total_g,
+             "carbon_per_request_g": r.carbon_per_request_g,
+             "replica_epochs": float(r.replicas.sum())}
+            for pol, r in res_pol.items()]
+    derived = {
+        "n_users": pop.n_users,
+        "n_epochs": T,
+        "gen_s": gen_s,
+        "speedup_x": scl_s / vec_s,
+        "parity_max_abs_diff": parity,
+        "cpr_carbon_g": rc.carbon_per_request_g,
+        "cpr_latency_g": rl.carbon_per_request_g,
+        "cpr_ratio": rc.carbon_per_request_g / rl.carbon_per_request_g,
+        "viol_rate_delta": abs(rc.violation_rate - rl.violation_rate),
+        "over_capacity_epochs": over_cap,
+        "sweep_parity_max_abs_diff": sweep_parity,
+    }
+    return rows, derived

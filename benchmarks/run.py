@@ -100,6 +100,9 @@ def main() -> None:
         ("jax_sweep_scale", figs.jax_sweep_scale,
          {"n_traces": 1500, "n_targets": 4} if fast
          else {"n_traces": 100_000, "n_targets": 10}),
+        # carbon-aware traffic: 1M-user routing + autoscaling, carbon
+        # vs latency routing, fleet-vs-jax sweep-with-traffic parity
+        ("traffic_sweep", figs.traffic_sweep, {"n_users": 1_000_000}),
     ]
     only = args.get("only")
     only_set = set(only.split(",")) if only else None

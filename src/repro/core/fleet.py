@@ -664,11 +664,35 @@ def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
     return demand_one, tgt_one, carbon, plan, n_tr, n_tg
 
 
+def _prepare_traffic(traffic, plan, T: int, interval_s: float):
+    """Shared traffic prologue for the fleet and jax sweep backends:
+    generate the population's (T, R) request tensor and run the NumPy
+    traffic pipeline against the plan's region-intensity table. Returns
+    (ArrivalTensor, TrafficResult). Requires a placement plan — the
+    traffic layers are per *region*, so without a region assignment
+    there is nothing to route between."""
+    from repro.traffic.arrivals import request_matrix
+    from repro.traffic.sim import simulate_traffic
+    if plan is None:
+        raise ValueError("traffic=TrafficConfig(...) requires a placement "
+                         "engine (placement=...): routing and autoscaling "
+                         "are per region")
+    R = plan.n_regions
+    if traffic.population.n_regions != R:
+        raise ValueError(f"traffic population spans "
+                         f"{traffic.population.n_regions} regions but the "
+                         f"placement engine has {R}")
+    arr = request_matrix(traffic.population, T, interval_s)
+    res = simulate_traffic(arr.requests, plan.region_intensity[:T], traffic,
+                           interval_s)
+    return arr, res
+
+
 def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                            carbon, targets: Sequence[float],
                            cfg_base: SimConfig,
                            demand_scale: float = 1.0,
-                           placement=None) -> list:
+                           placement=None, traffic=None) -> list:
     """Fleet-backed `sweep_population`: batches every (policy x target x
     trace) combination into ONE FleetSimulator.run call (policy-major
     column blocks via BlockPolicy) and emits the same aggregate rows, in
@@ -683,6 +707,12 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
     and the planned per-container carbon matrix replaces `carbon`. Rows
     then also carry `placement_migrations_mean` and
     `placement_overhead_g_mean`.
+
+    With `traffic` (a `repro.traffic.TrafficConfig`; requires
+    `placement`), a request population is routed and autoscaled over
+    the plan's regions first, and each container's demand is modulated
+    by its region's serving load (`TrafficResult.demand_mod`). Rows
+    then also carry the `traffic_*` serving metrics.
     """
     (demand_one, tgt_one, carbon, plan, n_tr, n_tg) = \
         _prepare_sweep_inputs(traces, carbon, targets, cfg_base,
@@ -690,6 +720,15 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                               lambda eng, d: eng.plan(
                                   d, state_gb=cfg_base.state_gb))
     per_pol = n_tr * n_tg
+
+    traffic_summary = None
+    if traffic is not None:
+        T = demand_one.shape[0]
+        _, tres = _prepare_traffic(traffic, plan, T, cfg_base.interval_s)
+        mod = tres.demand_mod(traffic.demand_gain)       # (T, R)
+        mod_cols = mod[np.arange(T)[:, None], plan.assign[:T]]   # (T, n_tr)
+        demand_one = demand_one * np.tile(mod_cols, (1, n_tg))
+        traffic_summary = tres.summary()
 
     sim = FleetSimulator(family, interval_s=cfg_base.interval_s,
                          suspend_releases_slice=cfg_base.suspend_releases_slice)
@@ -724,11 +763,12 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
         for p, (name, _) in enumerate(loop_pols):
             results[name] = (res, p * per_pol)
 
-    return _aggregate_sweep_rows(policies, results, targets, n_tr, plan)
+    return _aggregate_sweep_rows(policies, results, targets, n_tr, plan,
+                                 traffic_summary)
 
 
 def _aggregate_sweep_rows(policies: dict, results: dict, targets, n_tr: int,
-                          plan=None) -> list:
+                          plan=None, traffic_summary=None) -> list:
     """Fold per-container FleetResult arrays into the sweep's aggregate
     rows. `results` maps policy name -> (FleetResult, column offset);
     shared by the fleet and jax sweep backends so the two emit the same
@@ -777,5 +817,9 @@ def _aggregate_sweep_rows(policies: dict, results: dict, targets, n_tr: int,
                     np.mean(plan.migrations))
                 row["placement_overhead_g_mean"] = float(
                     np.mean(plan.overhead_g))
+            if traffic_summary is not None:
+                # the traffic layer runs once on the shared plan, ahead
+                # of the policy/target fan-out: identical per row
+                row.update(traffic_summary)
             rows.append(row)
     return rows

@@ -64,7 +64,7 @@ from repro.cluster.migration import MigrationCostModel
 from repro.cluster.slices import SliceFamily
 from repro.core.fleet import (FleetResult, _aggregate_sweep_rows,
                               _prepare_run_inputs, _prepare_sweep_inputs,
-                              _PEAK_WINDOW)
+                              _prepare_traffic, _PEAK_WINDOW)
 from repro.core.policy import K_MIGRATE, K_RESUME, K_STAY, K_SUSPEND
 from repro.core.simulator import SimConfig
 
@@ -445,11 +445,11 @@ _DECIDERS = {"agnostic": _decide_agnostic, "suspend_resume": _decide_sr,
 
 @partial(jax.jit if HAS_JAX else lambda f, **kw: f,
          static_argnames=("spec", "srs", "record", "tabs", "dt", "mig",
-                          "cmode", "n_rep", "R"))
-def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
-                srs: bool, record: bool, tabs: _TablesS, dt: float,
-                mig: tuple, cmode: str = "dense", n_rep: int = 1,
-                R: int = 0):
+                          "cmode", "n_rep", "R", "traffic"))
+def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None, *,
+                spec: tuple, srs: bool, record: bool, tabs: _TablesS,
+                dt: float, mig: tuple, cmode: str = "dense", n_rep: int = 1,
+                R: int = 0, traffic=None):
     """One XLA computation: scan the staged epoch step over time.
 
     The carry is three packed arrays — f64 accumulators (6 + S + 1 rows:
@@ -478,6 +478,16 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
     logical fleet is N = n_cols * n_rep wide but only compact inputs
     ever exist on host or in HBM.
 
+    `traffic` (a static `repro.traffic.sim_jax.TrafficSpec`; indexed
+    mode only, with `req_mat` the (T, R) request tensor in xs) folds the
+    traffic subsystem into the same scan: each step routes the epoch's
+    request row by the carbon row, autoscales the per-region replica
+    fleets (an (R,) replica-count carry), and modulates each compact
+    demand column by its region's serving load before the n_rep tiling
+    — all carries stay (R,)/(R, R)-shaped, nothing (T, N). A fifth
+    accumulator row sums the modulated demand so `work_demanded` can be
+    recovered without re-materializing it on host.
+
     Returns the final carry tuple (+ optional (T, N) power/served series).
     """
     if cmode == "indexed":
@@ -486,7 +496,10 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
         N = n_cols * n_rep
     else:
         assert n_rep == 1, "n_rep tiling requires indexed carbon"
+        assert traffic is None, "traffic fold requires indexed carbon"
         N = demand.shape[1]
+    if traffic is not None:
+        from repro.traffic.sim_jax import traffic_step
     S = tabs.n_slices
     decide = _DECIDERS[spec[0]]
     suspend_r = spec[0] == "suspend_resume"
@@ -502,7 +515,10 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
                  else jnp.zeros((), dtype=jnp.float64))
 
     tos_cols = jnp.arange(S + 1, dtype=jnp.int32)
-    acc0 = jnp.zeros((_ACC_ROWS, N), dtype=jnp.float64)
+    n_acc = _ACC_ROWS + (1 if traffic is not None else 0)
+    acc0 = jnp.zeros((n_acc, N), dtype=jnp.float64)
+    rep0 = (jnp.full(R, float(traffic.min_rep), dtype=jnp.float64)
+            if traffic is not None else None)
     dynf0 = jnp.stack([jnp.ones(N, dtype=jnp.float64),       # duty
                        jnp.zeros(N, dtype=jnp.float64)])     # migrating_s
     dyni0 = jnp.concatenate(
@@ -520,13 +536,28 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
             if use_peak else None)
 
     def step(st, x):
+        if traffic is not None:
+            rep = st[-1]
+            st = st[:-1]
         if cmode == "indexed":
-            d, code, c_row = x
+            if traffic is not None:
+                d, code, c_row, req = x
+                # route this epoch's requests by the carbon row, scale
+                # the replica fleets; the serving loads modulate demand
+                rep1, t_outs = traffic_step(traffic, rep, req, c_row)
+                mod_row = t_outs[0]
+            else:
+                d, code, c_row = x
             # R-way select chain over the epoch's (R,) region row — the
             # compact-width analogue of gathering region_mat[t, codes[t]]
             c = jnp.full(code.shape, c_row[0], dtype=jnp.float64)
             for r in range(1, R):
                 c = jnp.where(code == r, c_row[r], c)
+            if traffic is not None:
+                mod = jnp.full(code.shape, mod_row[0], dtype=jnp.float64)
+                for r in range(1, R):
+                    mod = jnp.where(code == r, mod_row[r], mod)
+                d = d * mod
             if n_rep > 1:
                 d = jnp.tile(d, n_rep)
                 c = jnp.tile(c, n_rep)
@@ -624,11 +655,13 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
         suspended1 = jnp.where(m_sus, True, sus)
         suspended1 = jnp.where(m_res, False, suspended1)
         tos_col = jnp.where(suspended1, S, idx1)
-        contribs = jnp.stack(
-            [power * c,                                 # -> emissions_g
-             power,                                     # -> energy_wh
-             served,                                    # -> work_done
-             jnp.maximum(0.0, d - served)])             # -> throttled
+        rows = [power * c,                              # -> emissions_g
+                power,                                  # -> energy_wh
+                served,                                 # -> work_done
+                jnp.maximum(0.0, d - served)]           # -> throttled
+        if traffic is not None:
+            rows.append(d)                              # -> work_demanded
+        contribs = jnp.stack(rows)
         acc1 = acc + contribs
 
         # ---- migration progress + dwell (after accounting) ----------
@@ -652,12 +685,19 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, *, spec: tuple,
         ys = (power, served) if record else None
         st1 = ((acc1, dynf1, dyni1, win1) if use_peak
                else (acc1, dynf1, dyni1))
+        if traffic is not None:
+            st1 = st1 + (rep1,)
         return st1, ys
 
     st0 = ((acc0, dynf0, dyni0, win0) if use_peak
            else (acc0, dynf0, dyni0))
-    xs = ((demand, codes, region_mat) if cmode == "indexed"
-          else (demand, cmat))
+    if traffic is not None:
+        st0 = st0 + (rep0,)
+    if cmode == "indexed":
+        xs = ((demand, codes, region_mat) if traffic is None
+              else (demand, codes, region_mat, req_mat))
+    else:
+        xs = (demand, cmat)
     carry, ys = lax.scan(step, st0, xs)
     return carry[:3], ys
 
@@ -688,7 +728,7 @@ class FleetSimulatorJax:
 
     def run(self, policy, demand, carbon, targets, epsilon=0.05,
             state_gb=1.0, demand_scale=1.0, record: bool = False,
-            n_rep: int = 1) -> FleetResult:
+            n_rep: int = 1, traffic=None) -> FleetResult:
         """Advance the fleet; same contract as `FleetSimulator.run`, plus
         the memory-lean indexed-carbon form: `carbon` may be a
         ``(region_mat (T, R), codes (T, n_cols) int)`` pair — a
@@ -697,11 +737,19 @@ class FleetSimulatorJax:
         matrix and ``n_rep`` tiles its columns inside the scan step to
         the logical fleet width N = n_cols * n_rep (targets/epsilon/
         state_gb are full-N). No (T, N) array exists on host or device.
+
+        `traffic` (indexed-carbon runs only) is a ``(TrafficSpec,
+        req_mat (T, R))`` pair: the scan then also routes + autoscales
+        the request tensor each epoch and modulates container demand by
+        the per-region serving load (see `_fleet_scan`).
         """
         spec = _policy_spec(policy)
         t = self.tables
         dt = self.interval_s
         indexed = isinstance(carbon, tuple)
+        if traffic is not None and not indexed:
+            raise ValueError("traffic fold requires indexed carbon "
+                             "(region_mat, codes)")
         if indexed:
             region_mat, codes = carbon
             demand = np.asarray(demand, dtype=np.float64)
@@ -724,6 +772,13 @@ class FleetSimulatorJax:
                 raise ValueError(f"region codes shape {codes.shape} does "
                                  f"not match demand {(T, n_cols)}")
             R = region_mat.shape[1]
+            t_spec = req_mat = None
+            if traffic is not None:
+                t_spec, req_mat = traffic
+                req_mat = np.asarray(req_mat, dtype=np.float64)
+                if req_mat.shape != (T, R):
+                    raise ValueError(f"traffic request tensor shape "
+                                     f"{req_mat.shape}; expected {(T, R)}")
             targets = np.broadcast_to(
                 np.asarray(targets, dtype=np.float64), (N,))
             epsilon = np.broadcast_to(
@@ -766,12 +821,15 @@ class FleetSimulatorJax:
                     cm = (jax.device_put(region_mat, dev),
                           jax.device_put(codes, dev))
                     dm = jax.device_put(demand, dev)
+                    rq = (jax.device_put(req_mat, dev)
+                          if traffic is not None else None)
                     outs.append(_fleet_scan(
                         dm, cm,
                         jax.device_put(targets[lo:hi], dev),
                         jax.device_put(epsilon[lo:hi], dev),
-                        jax.device_put(state_gb[lo:hi], dev),
-                        cmode="indexed", n_rep=hi_r - lo_r, R=R, **kw))
+                        jax.device_put(state_gb[lo:hi], dev), rq,
+                        cmode="indexed", n_rep=hi_r - lo_r, R=R,
+                        traffic=t_spec, **kw))
                 else:
                     lo = s * N // n_sh
                     hi = (s + 1) * N // n_sh
@@ -793,9 +851,14 @@ class FleetSimulatorJax:
                     for k in range(2))
 
         elapsed = float(np.cumsum(np.full(T, dt))[-1]) if T else 0.0
-        work_dem = demand.sum(axis=0) * dt
-        if indexed and n_rep > 1:
-            work_dem = np.tile(work_dem, n_rep)
+        if traffic is not None:
+            # host demand is pre-modulation: the scan's fifth accumulator
+            # row carries the modulated per-container demand sums
+            work_dem = acc[_ACC_ROWS] * dt
+        else:
+            work_dem = demand.sum(axis=0) * dt
+            if indexed and n_rep > 1:
+                work_dem = np.tile(work_dem, n_rep)
         # loop-invariant scalings deferred out of the scan (see
         # _fleet_scan's accounting note); term order mirrors _account
         return FleetResult(
@@ -824,7 +887,7 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                          carbon, targets: Sequence[float],
                          cfg_base: SimConfig,
                          demand_scale: float = 1.0,
-                         placement=None,
+                         placement=None, traffic=None,
                          admission_impl: str = "auto") -> list:
     """JAX-backed `sweep_population`: one device-resident scan per policy
     over all (target x trace) columns, same aggregate rows, same order,
@@ -859,6 +922,20 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
         carbon = (plan.region_intensity, plan.assign.astype(np.int32))
         n_rep = n_tg
 
+    traffic_summary = None
+    run_traffic = None
+    if traffic is not None:
+        from repro.traffic.sim_jax import TrafficSpec
+        arr, tres = _prepare_traffic(traffic, plan, demand_one.shape[0],
+                                     cfg_base.interval_s)
+        # the in-scan traffic_step fold drives the demand modulation on
+        # device; the serving-ledger row metrics come from the (tiny,
+        # (T, R)) NumPy pipeline — parity between the two is pinned
+        # <=1e-6 by the jax traffic tests
+        run_traffic = (TrafficSpec.from_config(traffic, cfg_base.interval_s),
+                       arr.requests)
+        traffic_summary = tres.summary()
+
     sim = FleetSimulatorJax(
         family, interval_s=cfg_base.interval_s,
         suspend_releases_slice=cfg_base.suspend_releases_slice)
@@ -868,5 +945,6 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                                  epsilon=cfg_base.epsilon,
                                  state_gb=cfg_base.state_gb,
                                  demand_scale=demand_scale,
-                                 n_rep=n_rep), 0)
-    return _aggregate_sweep_rows(policies, results, targets, n_tr, plan)
+                                 n_rep=n_rep, traffic=run_traffic), 0)
+    return _aggregate_sweep_rows(policies, results, targets, n_tr, plan,
+                                 traffic_summary)

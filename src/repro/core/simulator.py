@@ -191,7 +191,7 @@ def sweep_population(policies: dict, family: SliceFamily, traces, carbon,
                      targets: Sequence[float], cfg_base: SimConfig,
                      demand_scale: float = 1.0,
                      backend: str = "scalar",
-                     placement=None) -> list:
+                     placement=None, traffic=None) -> list:
     """Returns rows: {policy, target, mean/std of carbon rate + throttle}.
 
     `backend="fleet"` batches all (target x trace) pairs per policy through
@@ -206,21 +206,28 @@ def sweep_population(policies: dict, family: SliceFamily, traces, carbon,
     `repro.cluster.placement.PlacementEngine`: every trace column is then
     assigned a region per epoch by the placement layer and `carbon` is
     ignored in favour of the planned per-container carbon matrix.
+
+    `traffic` (a `repro.traffic.TrafficConfig`; requires `placement`)
+    runs the request-routing + replica-autoscaling layers over the
+    plan's regions first and modulates each container's demand by its
+    region's serving load; rows gain the `traffic_*` serving metrics.
     """
     if backend == "fleet":
         from repro.core.fleet import sweep_population_fleet
         return sweep_population_fleet(policies, family, traces, carbon,
                                       targets, cfg_base,
                                       demand_scale=demand_scale,
-                                      placement=placement)
+                                      placement=placement, traffic=traffic)
     if backend == "jax":
         from repro.core.fleet_jax import sweep_population_jax
         return sweep_population_jax(policies, family, traces, carbon,
                                     targets, cfg_base,
                                     demand_scale=demand_scale,
-                                    placement=placement)
+                                    placement=placement, traffic=traffic)
     if placement is not None:
         raise ValueError("placement requires backend='fleet' or 'jax'")
+    if traffic is not None:
+        raise ValueError("traffic requires backend='fleet' or 'jax'")
     if backend != "scalar":
         raise ValueError(f"unknown sweep backend {backend!r}")
     rows = []

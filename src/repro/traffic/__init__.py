@@ -1,0 +1,33 @@
+"""Carbon-aware traffic subsystem: demand -> routing -> provisioning.
+
+Three layers over the placed fleet (CASPER + CarbonScaler, see
+PAPERS.md):
+
+  - `arrivals`: per-region request-arrival generation for >=1M synthetic
+    users — time-zone-shifted diurnal shape x AR(1)+burst noise,
+    aggregated to a (T, R) requests-per-epoch tensor;
+  - `routing`: SLO-constrained request routing — each epoch, each source
+    region's demand is water-filled across SLO-feasible serving regions
+    in carbon (or latency) order, scalar reference and vectorized kernel
+    pinned to 1e-9 parity;
+  - `autoscale`: replica provisioning under a carbon cap — marginal
+    replicas admitted by marginal carbon-efficiency (the CarbonScaler
+    greedy: sort + cumsum over an (R, K) efficiency table);
+  - `sim`: the pipeline (`TrafficConfig`, `simulate_traffic`) and its
+    coupling into `sweep_population(..., traffic=...)`;
+  - `sim_jax`: the same epoch step as a pure JAX function, folded into
+    the fleet backend's `lax.scan` (all (R,)/(R, R) carries).
+"""
+from repro.traffic.arrivals import ArrivalTensor, UserPopulation, request_matrix
+from repro.traffic.autoscale import AutoscaleResult, ReplicaConfig, autoscale
+from repro.traffic.routing import (RouteResult, RoutingConfig,
+                                   latency_from_timezones, route, route_scalar)
+from repro.traffic.sim import TrafficConfig, TrafficResult, simulate_traffic
+
+__all__ = [
+    "ArrivalTensor", "UserPopulation", "request_matrix",
+    "RouteResult", "RoutingConfig", "latency_from_timezones", "route",
+    "route_scalar",
+    "AutoscaleResult", "ReplicaConfig", "autoscale",
+    "TrafficConfig", "TrafficResult", "simulate_traffic",
+]

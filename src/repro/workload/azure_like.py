@@ -107,6 +107,39 @@ def _draw_targets_matrix(rng, n):
     return means, rng.uniform(lo, hi)
 
 
+def ar1_burst_factors(rng, T: int, sigma, rho: float = 0.97) -> np.ndarray:
+    """(T, n) multiplicative AR(1)+burst modulation factors, mean ~1.
+
+    The minutes-to-hours variability core shared by the Azure-like
+    utilization generator below and the traffic arrival generator
+    (`repro.traffic.arrivals`): a mean-reverting log-AR(1) with
+    per-column volatility ``sigma`` plus Poisson multi-interval bursts,
+    exponentiated with the -sigma^2/2 lognormal mean correction. Draw
+    order (normal block, burst counts, starts, lens, amps) is part of
+    the contract — `_gen_series_block` calls this inside its fixed-point
+    loop and the calibration tests pin the resulting populations.
+    """
+    sigma = np.asarray(sigma, dtype=np.float64)
+    n = sigma.size
+    sig_eps = sigma * np.sqrt(1 - rho ** 2)
+    eps = rng.normal(0.0, 1.0, (T, n)) * sig_eps
+    x = np.zeros((T, n))
+    for i in range(1, T):
+        x[i] = rho * x[i - 1] + eps[i]
+    # bursts via difference-array: +amp at start, -amp at end, cumsum
+    counts = rng.poisson(T / 600, n)
+    tot = int(counts.sum())
+    vm = np.repeat(np.arange(n), counts)
+    starts = rng.integers(0, T, tot)
+    lens = rng.integers(3, 24, tot)
+    amps = rng.uniform(1.0, 3.0, tot) * sigma[vm]
+    bd = np.zeros((T + 1, n))
+    np.add.at(bd, (starts, vm), amps)
+    np.add.at(bd, (np.minimum(starts + lens, T), vm), -amps)
+    burst = np.cumsum(bd[:-1], axis=0)
+    return np.exp(x - 0.5 * sigma ** 2 + burst)
+
+
 def _gen_series_block(rng, T, means, covs):
     """(T, n) block of AR(1)+burst series, vectorized over the VM axis.
 
@@ -120,30 +153,13 @@ def _gen_series_block(rng, T, means, covs):
     the Azure calibration tests pin) do not.
     """
     n = means.size
-    rho = 0.97
     sigma = np.maximum(covs, 0.02)                       # (n,)
-    sig_eps = sigma * np.sqrt(1 - rho ** 2)
     scale = np.ones(n)
     out = np.empty((T, n))
     done = np.zeros(n, dtype=bool)
     for _ in range(4):                       # fixed-point on clipped stats
-        eps = rng.normal(0.0, 1.0, (T, n)) * sig_eps
-        x = np.zeros((T, n))
-        for i in range(1, T):
-            x[i] = rho * x[i - 1] + eps[i]
-        # bursts via difference-array: +amp at start, -amp at end, cumsum
-        counts = rng.poisson(T / 600, n)
-        tot = int(counts.sum())
-        vm = np.repeat(np.arange(n), counts)
-        starts = rng.integers(0, T, tot)
-        lens = rng.integers(3, 24, tot)
-        amps = rng.uniform(1.0, 3.0, tot) * sigma[vm]
-        bd = np.zeros((T + 1, n))
-        np.add.at(bd, (starts, vm), amps)
-        np.add.at(bd, (np.minimum(starts + lens, T), vm), -amps)
-        burst = np.cumsum(bd[:-1], axis=0)
-        series = np.clip(
-            means * scale * np.exp(x - 0.5 * sigma ** 2 + burst), 0.0, 1.0)
+        factors = ar1_burst_factors(rng, T, sigma)
+        series = np.clip(means * scale * factors, 0.0, 1.0)
         fresh = ~done
         out[:, fresh] = series[:, fresh]
         got = series.mean(axis=0)

@@ -1,0 +1,151 @@
+"""Serving scheduler + replay harness coverage (previously untested).
+
+Pins the scheduler's request ledger (arrival order, backlog
+conservation, the baseline-capacity `util` semantics), the vectorized
+`poisson_arrivals` bit-parity against a sequential reference, and the
+replay harness's tracking-tolerance verdict including the empty-trace
+edge case.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import CarbonAwareScheduler, poisson_arrivals
+from repro.workload.replay import ReplayHarness
+
+
+def _sequential_poisson(rate_per_s, duration_s, seed=0):
+    # the pre-vectorization reference implementation, kept here as the
+    # seeded-parity oracle
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / max(rate_per_s, 1e-9))
+        if t > duration_s:
+            return out
+        out.append(t)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_serves_in_arrival_order():
+    sch = CarbonAwareScheduler(capacity_tok_s=10.0, interval_s=100.0)
+    # offered out of order; the heap must serve by arrival time
+    for a in (50.0, 10.0, 30.0):
+        sch.offer(a, max_new=100)
+    res = sch.run_interval(duty=1.0, slice_multiple=1.0)
+    assert res["served"] == 3
+    done = [r.arrival_s for r in sch.completed]
+    assert done == sorted(done) == [10.0, 30.0, 50.0]
+    lat = [r.done_s - r.arrival_s for r in sch.completed]
+    assert all(v >= 0 for v in lat)      # completion never precedes arrival
+
+
+def test_scheduler_backlog_conservation():
+    sch = CarbonAwareScheduler(capacity_tok_s=10.0, interval_s=100.0)
+    n = 12
+    for i in range(n):
+        sch.offer(float(i), max_new=300)    # 300 tok each, budget 1000/ival
+    served_total = 0
+    for _ in range(6):
+        res = sch.run_interval(duty=1.0, slice_multiple=1.0)
+        assert res["served"] + res["backlog"] + served_total == n
+        served_total += res["served"]
+    assert served_total == n
+
+
+def test_scheduler_util_is_baseline_capacity_fraction():
+    # one 250-token request against a 10 tok/s * 100 s baseline: util
+    # must be 0.25 regardless of the duty/slice allocation that served
+    # it (the old expression multiplied duty * slice_multiple back in,
+    # double-counting the allocation)
+    for duty, mult in [(1.0, 1.0), (0.5, 2.0), (1.0, 4.0)]:
+        sch = CarbonAwareScheduler(capacity_tok_s=10.0, interval_s=100.0)
+        sch.offer(0.0, max_new=250)
+        res = sch.run_interval(duty=duty, slice_multiple=mult)
+        assert res["served"] == 1
+        assert res["util"] == pytest.approx(0.25)
+
+
+def test_scheduler_demand_uses_configured_interval():
+    sch = CarbonAwareScheduler(capacity_tok_s=10.0, interval_s=100.0)
+    sch.offer(0.0, max_new=500)
+    assert sch.demand() == pytest.approx(0.5)        # 500 / (10 * 100)
+    assert sch.demand(window_s=50.0) == pytest.approx(1.0)
+    # unthrottled next interval drains it
+    res = sch.run_interval(duty=1.0, slice_multiple=1.0)
+    assert res["served"] == 1 and sch.demand() == 0.0
+
+
+def test_scheduler_zero_duty_serves_nothing():
+    sch = CarbonAwareScheduler(capacity_tok_s=10.0, interval_s=100.0)
+    sch.offer(0.0, max_new=10)
+    res = sch.run_interval(duty=0.0, slice_multiple=1.0)
+    assert res["served"] == 0 and res["backlog"] == 1
+    assert res["util"] == 0.0
+
+
+def test_scheduler_latency_percentiles():
+    sch = CarbonAwareScheduler(capacity_tok_s=10.0, interval_s=100.0)
+    assert sch.latency_stats() == {"p50_s": 0.0, "p95_s": 0.0, "n": 0}
+    for a in poisson_arrivals(0.2, 300.0, seed=1):
+        sch.offer(a, max_new=50)
+    for _ in range(4):
+        sch.run_interval(duty=1.0, slice_multiple=1.0)
+    stats = sch.latency_stats()
+    assert stats["n"] == len(sch.completed) > 0
+    assert 0.0 <= stats["p50_s"] <= stats["p95_s"]
+    assert stats["p95_s"] > 0.0          # the backlog makes some requests wait
+
+
+# ---------------------------------------------------------------------------
+# poisson_arrivals
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rate,duration", [(0.5, 600.0), (20.0, 600.0),
+                                           (3.0, 10_000.0)])
+def test_poisson_arrivals_matches_sequential_reference(rate, duration):
+    ref = _sequential_poisson(rate, duration, seed=7)
+    for chunk in (1, 3, 4096):
+        vec = poisson_arrivals(rate, duration, seed=7, chunk=chunk)
+        assert vec == ref                      # bit-identical, any chunking
+
+
+def test_poisson_arrivals_statistics():
+    out = np.asarray(poisson_arrivals(5.0, 20_000.0, seed=2))
+    assert np.all(np.diff(out) > 0) and out.max() <= 20_000.0
+    # event count within 5 sigma of rate * duration
+    assert abs(len(out) - 100_000) < 5 * np.sqrt(100_000)
+    assert poisson_arrivals(5.0, 0.0, seed=2) == []
+
+
+# ---------------------------------------------------------------------------
+# replay harness
+# ---------------------------------------------------------------------------
+
+def test_replay_within_tolerance_verdict():
+    h = ReplayHarness(tolerance=0.05)
+    trace = 0.5 + 0.3 * np.sin(np.linspace(0, 4 * np.pi, 96))
+    rng = np.random.default_rng(0)
+    res = h.replay(trace, lambda u: u + rng.normal(0.0, 0.01))
+    assert res["within_tolerance"] and res["ma_max_err"] <= 0.05
+    assert len(h.history) == 96
+    bad = ReplayHarness(tolerance=0.05).replay(trace, lambda u: u + 0.2)
+    assert not bad["within_tolerance"]
+    assert bad["mean_abs_err"] == pytest.approx(0.2)
+
+
+def test_replay_empty_trace_is_trivially_tracking():
+    h = ReplayHarness()
+    res = h.replay([], lambda u: u)
+    assert res == {"mean_abs_err": 0.0, "ma_max_err": 0.0,
+                   "within_tolerance": True, "achieved": []}
+    assert h.history == []
+
+
+def test_replay_short_trace_uses_short_kernel():
+    # shorter than the 12-interval window: kernel shrinks, no nan
+    h = ReplayHarness()
+    res = h.replay([0.2, 0.4, 0.6], lambda u: u)
+    assert res["ma_max_err"] == 0.0 and res["within_tolerance"]

@@ -1,0 +1,95 @@
+"""JAX traffic fold: parity with the NumPy pipeline and the fleet sweep.
+
+`traffic_step` mirrors the NumPy router/autoscaler term for term; the
+only float drift is XLA's reduction association, so standalone parity is
+pinned <=1e-6 (replica counts bit-equal). The sweep test pins the real
+contract: `sweep_population(..., backend="jax", traffic=...)` — routing
++ autoscaling folded into the fleet scan — must match the fleet
+backend's pre-modulated run to the backend parity budget.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.fleet_jax import ensure_cpu_xla_flags  # noqa: E402
+
+ensure_cpu_xla_flags()
+
+from repro.carbon.intensity import TraceProvider  # noqa: E402
+from repro.cluster.placement import PlacementConfig, PlacementEngine  # noqa: E402
+from repro.cluster.slices import paper_family  # noqa: E402
+from repro.core.policy import (CarbonAgnosticPolicy,  # noqa: E402
+                               CarbonContainerPolicy)
+from repro.core.simulator import SimConfig, sweep_population  # noqa: E402
+from repro.traffic import (TrafficConfig, UserPopulation,  # noqa: E402
+                           request_matrix, simulate_traffic)
+from repro.traffic.autoscale import ReplicaConfig  # noqa: E402
+from repro.traffic.sim_jax import simulate_traffic_jax  # noqa: E402
+from repro.workload.azure_like import sample_population  # noqa: E402
+
+TOL = 1e-6
+
+
+@pytest.mark.parametrize("policy,budget", [("carbon", None),
+                                           ("carbon", 6.0),
+                                           ("latency", 6.0)])
+def test_simulate_traffic_jax_matches_numpy(policy, budget):
+    from repro.traffic.routing import RoutingConfig
+    pop = UserPopulation(n_users=150_000, n_regions=3, seed=0)
+    T = 96
+    arr = request_matrix(pop, T, 300.0)
+    rng = np.random.default_rng(11)
+    carbon = 100.0 + 500.0 * rng.random((T, 3))
+    cfg = TrafficConfig(population=pop,
+                        routing=RoutingConfig(policy=policy),
+                        replicas=ReplicaConfig(max_replicas=8, max_step=2,
+                                               budget_g_per_epoch=budget))
+    rn = simulate_traffic(arr.requests, carbon, cfg)
+    rj = simulate_traffic_jax(arr.requests, carbon, cfg)
+    np.testing.assert_array_equal(rn.replicas, rj.replicas)
+    for f in ("routed", "served", "dropped_route", "dropped_cap",
+              "violations", "emissions_g"):
+        a, b = getattr(rn, f), getattr(rj, f)
+        scale = max(float(np.max(np.abs(a))), 1.0)
+        assert np.max(np.abs(a - b)) <= TOL * scale, f
+
+
+def test_sweep_population_jax_with_traffic_matches_fleet():
+    fam = paper_family()
+    traces = [t.util for t in sample_population(6, days=1, seed=5)]
+    provs = [TraceProvider.for_region(r, hours=24, seed=1)
+             for r in ("PL", "NL", "CAISO")]
+    eng = PlacementEngine(fam, provs,
+                          config=PlacementConfig(capacity=4, min_dwell=4))
+    pols = {"cc_energy": lambda: CarbonContainerPolicy("energy"),
+            "carbon_agnostic": CarbonAgnosticPolicy}
+    cfgb = SimConfig(target_rate=0.0)
+    tc = TrafficConfig(
+        population=UserPopulation(n_users=100_000, n_regions=3, seed=3),
+        replicas=ReplicaConfig(max_replicas=8, max_step=2))
+    rows_f = sweep_population(pols, fam, traces, None, [30.0, 60.0], cfgb,
+                              backend="fleet", placement=eng, traffic=tc)
+    rows_j = sweep_population(pols, fam, traces, None, [30.0, 60.0], cfgb,
+                              backend="jax", placement=eng, traffic=tc)
+    assert len(rows_f) == len(rows_j) == 4
+    for a, b in zip(rows_f, rows_j):
+        assert a["policy"] == b["policy"] and a["target"] == b["target"]
+        for k in ("carbon_rate_mean", "throttle_mean", "migrations_mean",
+                  "traffic_served", "traffic_emissions_g",
+                  "traffic_carbon_per_request_g", "traffic_slo_violations"):
+            d = abs(a[k] - b[k]) / max(abs(a[k]), 1e-9)
+            assert d <= TOL, (k, a[k], b[k])
+
+
+def test_jax_run_traffic_requires_indexed_carbon():
+    from repro.core.fleet_jax import FleetSimulatorJax
+    from repro.traffic.sim_jax import TrafficSpec
+    fam = paper_family()
+    sim = FleetSimulatorJax(fam)
+    tc = TrafficConfig(population=UserPopulation(n_users=1000, n_regions=2))
+    spec = TrafficSpec.from_config(tc, 300.0)
+    demand = np.full((4, 2), 0.5)
+    with pytest.raises(ValueError, match="indexed"):
+        sim.run(CarbonAgnosticPolicy(), demand, np.full(4, 100.0),
+                targets=0.0, traffic=(spec, np.zeros((4, 2))))
