@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test bench-fleet bench bench-gate placement jax-sweep traffic
+.PHONY: test-fast test bench-fleet bench bench-gate placement jax-sweep traffic elasticity
 
 # Fast lane: carbon-core + fleet + placement tests (seconds, no JAX
 # model compiles)
@@ -23,7 +23,7 @@ bench-fleet:
 # warmup_s, never gated).
 bench-gate:
 	$(PY) -m benchmarks.run \
-		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax,placement_sweep_pallas,traffic_sweep \
+		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax,placement_sweep_pallas,traffic_sweep,elasticity_sweep \
 		--fast true --json benchmarks/out/ci.json
 	$(PY) -m benchmarks.check_regression benchmarks/out/ci.json \
 		--min fleet_sweep.speedup_x=10 \
@@ -48,7 +48,18 @@ bench-gate:
 		--max traffic_sweep.cpr_ratio=0.9 \
 		--max traffic_sweep.viol_rate_delta=0 \
 		--max traffic_sweep.over_capacity_epochs=0 \
-		--max traffic_sweep.sweep_parity_max_abs_diff=1e-6
+		--max traffic_sweep.sweep_parity_max_abs_diff=1e-6 \
+		--min elasticity_sweep.speedup_x=3 \
+		--max elasticity_sweep.parity_max_abs_diff=1e-9 \
+		--min elasticity_sweep.levels_equal=1 \
+		--max elasticity_sweep.jax_parity_max_abs_diff=1e-6 \
+		--min elasticity_sweep.jax_levels_equal=1 \
+		--max elasticity_sweep.cap_violations=0 \
+		--min elasticity_sweep.forecast_savings_frac=0.005 \
+		--min elasticity_sweep.oracle_savings_frac=0.01 \
+		--min elasticity_sweep.work_ratio=0.9 \
+		--max elasticity_sweep.sweep_parity_max_abs_diff=1e-6 \
+		--min elasticity_sweep.sweep_levels_equal=1
 
 # Multi-region placement demo: heterogeneous fleet migrating between
 # low- and high-variability grids vs the frozen no-migration baseline
@@ -75,7 +86,14 @@ jax-sweep:
 		--min jax_sweep_scale.n_containers=1000000 \
 		--min jax_sweep_scale.container_epochs_per_s=1000000 \
 		--max jax_sweep_scale.peak_rss_mb=4096 \
-		--max jax_sweep_scale.over_capacity_epochs=0
+		--max jax_sweep_scale.over_capacity_epochs=0 \
+		--max jax_sweep_scale.elastic_cap_violations=0
+
+# Per-container elasticity demo: K-level CarbonScaler marginal
+# allocation under a shaped fleet carbon budget, with the
+# oracle/forecast/persistence forecaster ablation
+elasticity:
+	$(PY) examples/elasticity_demo.py
 
 bench:
 	$(PY) -m benchmarks.run

@@ -103,6 +103,11 @@ def main() -> None:
         # carbon-aware traffic: 1M-user routing + autoscaling, carbon
         # vs latency routing, fleet-vs-jax sweep-with-traffic parity
         ("traffic_sweep", figs.traffic_sweep, {"n_users": 1_000_000}),
+        # per-container elasticity: (N, K) greedy speedup + 3-backend
+        # parity, shaped-budget oracle/forecast/persistence ablation
+        ("elasticity_sweep", figs.elasticity_sweep,
+         {"n_containers": 300, "days": 4} if fast
+         else {"n_containers": 2000, "days": 10}),
     ]
     only = args.get("only")
     only_set = set(only.split(",")) if only else None

@@ -77,8 +77,7 @@ class ElasticJob:
 
     def checkpoint(self) -> dict:
         self.manager.save(self.step_idx, self.state)
-        self.manager.wait()
-        return self.manager._last_info or {}
+        return self.manager.last_info() or {}
 
     def migrate(self, devices) -> dict:
         """Stop-and-copy to a new device subset; returns timing breakdown."""

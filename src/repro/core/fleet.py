@@ -692,7 +692,8 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                            carbon, targets: Sequence[float],
                            cfg_base: SimConfig,
                            demand_scale: float = 1.0,
-                           placement=None, traffic=None) -> list:
+                           placement=None, traffic=None,
+                           elasticity=None) -> list:
     """Fleet-backed `sweep_population`: batches every (policy x target x
     trace) combination into ONE FleetSimulator.run call (policy-major
     column blocks via BlockPolicy) and emits the same aggregate rows, in
@@ -713,6 +714,15 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
     the plan's regions first, and each container's demand is modulated
     by its region's serving load (`TrafficResult.demand_mod`). Rows
     then also carry the `traffic_*` serving metrics.
+
+    With `elasticity` (a `repro.core.elasticity.ElasticityConfig`;
+    requires `placement`), the per-container CarbonScaler level
+    allocation runs over the scaled + traffic-modulated compact demand
+    before the fleet simulation; the fleet then advances on each
+    container's *served* demand (unserved work deferred through the
+    backlog) and rows carry the `elastic_*` metrics. Order is pinned —
+    demand_scale, then traffic, then elasticity — and shared with the
+    jax backend so the parity chain holds with all layers on.
     """
     (demand_one, tgt_one, carbon, plan, n_tr, n_tg) = \
         _prepare_sweep_inputs(traces, carbon, targets, cfg_base,
@@ -720,15 +730,38 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                               lambda eng, d: eng.plan(
                                   d, state_gb=cfg_base.state_gb))
     per_pol = n_tr * n_tg
+    T = demand_one.shape[0]
 
     traffic_summary = None
+    mod_cols = None
     if traffic is not None:
-        T = demand_one.shape[0]
         _, tres = _prepare_traffic(traffic, plan, T, cfg_base.interval_s)
         mod = tres.demand_mod(traffic.demand_gain)       # (T, R)
         mod_cols = mod[np.arange(T)[:, None], plan.assign[:T]]   # (T, n_tr)
-        demand_one = demand_one * np.tile(mod_cols, (1, n_tg))
         traffic_summary = tres.summary()
+        if elasticity is None:
+            demand_one = demand_one * np.tile(mod_cols, (1, n_tg))
+
+    elastic_summary = None
+    if elasticity is not None:
+        if plan is None:
+            raise ValueError("elasticity requires placement")
+        from repro.core.elasticity import simulate_elastic
+        comp = demand_one[:, :n_tr]
+        if demand_scale is not None and np.any(
+                np.asarray(demand_scale) != 1.0):
+            comp = comp * demand_scale
+        if mod_cols is not None:
+            comp = comp * mod_cols
+        eres = simulate_elastic(
+            comp, carbon[:, :n_tr], elasticity, cfg_base.interval_s,
+            carbon_forecast=_elastic_carbon_forecast(
+                plan, T, elasticity, cfg_base.interval_s),
+            budget_series=_elastic_budget_series(
+                plan, T, elasticity, cfg_base.interval_s))
+        demand_one = np.tile(eres.demand_served(), (1, n_tg))
+        demand_scale = 1.0          # already applied ahead of the layer
+        elastic_summary = eres.summary()
 
     sim = FleetSimulator(family, interval_s=cfg_base.interval_s,
                          suspend_releases_slice=cfg_base.suspend_releases_slice)
@@ -764,11 +797,43 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
             results[name] = (res, p * per_pol)
 
     return _aggregate_sweep_rows(policies, results, targets, n_tr, plan,
-                                 traffic_summary)
+                                 traffic_summary, elastic_summary)
+
+
+def _elastic_carbon_forecast(plan, T: int, elasticity,
+                             interval_s: float) -> np.ndarray:
+    """(T, n_tr) carbon estimates for the elasticity layer: forecast on
+    the plan's compact (T, R) region matrix, then gather per container.
+    The jax backend forecasts the same region matrix and applies its
+    R-way select in-scan, so the two see bit-identical estimates
+    (forecast-then-gather, never gather-then-forecast — containers
+    migrate between regions mid-trace)."""
+    from repro.carbon.forecast import forecast_series
+    cmode = {"oracle": "oracle", "persistence": "persistence",
+             "forecast": "diurnal_ar1"}[elasticity.forecast]
+    period = max(1, int(round(24 * 3600.0 / float(interval_s))))
+    chat_reg = forecast_series(plan.region_intensity, cmode,
+                               period_steps=period, rho=elasticity.rho)
+    return chat_reg[np.arange(T)[:, None], plan.assign[:T]]
+
+
+def _elastic_budget_series(plan, T: int, elasticity, interval_s: float):
+    """Shared shaped-budget series for the sweep backends (or None).
+
+    The shaping signal is the placed fleet's mean carbon intensity,
+    gathered from the plan exactly as written here; the jax sweep calls
+    this same helper so both backends hand `shaped_budget_series` the
+    same (T,) floats and allocate identical level counts."""
+    if not elasticity.shape_budget or elasticity.budget_g_per_epoch is None:
+        return None
+    from repro.core.elasticity import shaped_budget_series
+    dense = plan.region_intensity[np.arange(T)[:, None], plan.assign[:T]]
+    return shaped_budget_series(dense.mean(axis=1), elasticity, interval_s)
 
 
 def _aggregate_sweep_rows(policies: dict, results: dict, targets, n_tr: int,
-                          plan=None, traffic_summary=None) -> list:
+                          plan=None, traffic_summary=None,
+                          elastic_summary=None) -> list:
     """Fold per-container FleetResult arrays into the sweep's aggregate
     rows. `results` maps policy name -> (FleetResult, column offset);
     shared by the fleet and jax sweep backends so the two emit the same
@@ -821,5 +886,8 @@ def _aggregate_sweep_rows(policies: dict, results: dict, targets, n_tr: int,
                 # the traffic layer runs once on the shared plan, ahead
                 # of the policy/target fan-out: identical per row
                 row.update(traffic_summary)
+            if elastic_summary is not None:
+                # same sharing as traffic: one elastic pass per sweep
+                row.update(elastic_summary)
             rows.append(row)
     return rows

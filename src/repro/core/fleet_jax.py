@@ -63,8 +63,9 @@ import numpy as np
 from repro.cluster.migration import MigrationCostModel
 from repro.cluster.slices import SliceFamily
 from repro.core.fleet import (FleetResult, _aggregate_sweep_rows,
-                              _prepare_run_inputs, _prepare_sweep_inputs,
-                              _prepare_traffic, _PEAK_WINDOW)
+                              _elastic_budget_series, _prepare_run_inputs,
+                              _prepare_sweep_inputs, _prepare_traffic,
+                              _PEAK_WINDOW)
 from repro.core.policy import K_MIGRATE, K_RESUME, K_STAY, K_SUSPEND
 from repro.core.simulator import SimConfig
 
@@ -888,6 +889,7 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                          cfg_base: SimConfig,
                          demand_scale: float = 1.0,
                          placement=None, traffic=None,
+                         elasticity=None,
                          admission_impl: str = "auto") -> list:
     """JAX-backed `sweep_population`: one device-resident scan per policy
     over all (target x trace) columns, same aggregate rows, same order,
@@ -924,17 +926,50 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
 
     traffic_summary = None
     run_traffic = None
+    mod_cols = None
+    T = demand_one.shape[0]
     if traffic is not None:
         from repro.traffic.sim_jax import TrafficSpec
-        arr, tres = _prepare_traffic(traffic, plan, demand_one.shape[0],
-                                     cfg_base.interval_s)
-        # the in-scan traffic_step fold drives the demand modulation on
-        # device; the serving-ledger row metrics come from the (tiny,
-        # (T, R)) NumPy pipeline — parity between the two is pinned
-        # <=1e-6 by the jax traffic tests
-        run_traffic = (TrafficSpec.from_config(traffic, cfg_base.interval_s),
-                       arr.requests)
+        arr, tres = _prepare_traffic(traffic, plan, T, cfg_base.interval_s)
         traffic_summary = tres.summary()
+        if elasticity is None:
+            # the in-scan traffic_step fold drives the demand modulation
+            # on device; the serving-ledger row metrics come from the
+            # (tiny, (T, R)) NumPy pipeline — parity between the two is
+            # pinned <=1e-6 by the jax traffic tests
+            run_traffic = (TrafficSpec.from_config(traffic,
+                                                   cfg_base.interval_s),
+                           arr.requests)
+        else:
+            # with elasticity the modulation must land *before* the
+            # demand forecasters, so it is applied host-side on the
+            # compact matrix (same floats as the fleet backend — the
+            # level counts then agree exactly, not just to 1e-6)
+            mod = tres.demand_mod(traffic.demand_gain)
+            mod_cols = mod[np.arange(T)[:, None], plan.assign[:T]]
+
+    elastic_summary = None
+    if elasticity is not None:
+        if plan is None:
+            raise ValueError("elasticity requires placement")
+        from repro.core.elasticity_jax import simulate_elastic_jax
+        comp = demand_one                       # compact (T, n_tr)
+        if demand_scale is not None and np.any(
+                np.asarray(demand_scale) != 1.0):
+            comp = comp * demand_scale
+        if mod_cols is not None:
+            comp = comp * mod_cols
+        # separate compact-width scan (NOT folded into the sharded fleet
+        # scan — the (N·K,) argsort would run once per device shard);
+        # its served demand is what the fleet below advances on
+        eres = simulate_elastic_jax(comp, carbon, elasticity,
+                                    cfg_base.interval_s,
+                                    budget_series=_elastic_budget_series(
+                                        plan, T, elasticity,
+                                        cfg_base.interval_s))
+        demand_one = eres.demand_served()
+        demand_scale = 1.0          # already applied ahead of the layer
+        elastic_summary = eres.summary()
 
     sim = FleetSimulatorJax(
         family, interval_s=cfg_base.interval_s,
@@ -947,4 +982,4 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                                  demand_scale=demand_scale,
                                  n_rep=n_rep, traffic=run_traffic), 0)
     return _aggregate_sweep_rows(policies, results, targets, n_tr, plan,
-                                 traffic_summary)
+                                 traffic_summary, elastic_summary)

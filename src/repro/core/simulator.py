@@ -191,7 +191,8 @@ def sweep_population(policies: dict, family: SliceFamily, traces, carbon,
                      targets: Sequence[float], cfg_base: SimConfig,
                      demand_scale: float = 1.0,
                      backend: str = "scalar",
-                     placement=None, traffic=None) -> list:
+                     placement=None, traffic=None,
+                     elasticity=None) -> list:
     """Returns rows: {policy, target, mean/std of carbon rate + throttle}.
 
     `backend="fleet"` batches all (target x trace) pairs per policy through
@@ -211,23 +212,33 @@ def sweep_population(policies: dict, family: SliceFamily, traces, carbon,
     runs the request-routing + replica-autoscaling layers over the
     plan's regions first and modulates each container's demand by its
     region's serving load; rows gain the `traffic_*` serving metrics.
+
+    `elasticity` (a `repro.core.elasticity.ElasticityConfig`; requires
+    `placement`) runs the per-container CarbonScaler level allocation
+    over the (scaled, traffic-modulated) demand first — the fleet then
+    sees each container's *served* demand, with unserved work deferred
+    to later epochs; rows gain the `elastic_*` metrics.
     """
     if backend == "fleet":
         from repro.core.fleet import sweep_population_fleet
         return sweep_population_fleet(policies, family, traces, carbon,
                                       targets, cfg_base,
                                       demand_scale=demand_scale,
-                                      placement=placement, traffic=traffic)
+                                      placement=placement, traffic=traffic,
+                                      elasticity=elasticity)
     if backend == "jax":
         from repro.core.fleet_jax import sweep_population_jax
         return sweep_population_jax(policies, family, traces, carbon,
                                     targets, cfg_base,
                                     demand_scale=demand_scale,
-                                    placement=placement, traffic=traffic)
+                                    placement=placement, traffic=traffic,
+                                    elasticity=elasticity)
     if placement is not None:
         raise ValueError("placement requires backend='fleet' or 'jax'")
     if traffic is not None:
         raise ValueError("traffic requires backend='fleet' or 'jax'")
+    if elasticity is not None:
+        raise ValueError("elasticity requires backend='fleet' or 'jax'")
     if backend != "scalar":
         raise ValueError(f"unknown sweep backend {backend!r}")
     rows = []

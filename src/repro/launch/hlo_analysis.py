@@ -178,6 +178,8 @@ def memory_stats(compiled) -> dict:
 
 def cost_stats(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per program
+        ca = ca[0] if ca else {}
     get = lambda k: float(ca.get(k, 0.0) or 0.0)
     return {"flops": get("flops"),
             "transcendentals": get("transcendentals"),

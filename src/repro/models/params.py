@@ -9,6 +9,7 @@ From that single tree we derive:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from dataclasses import dataclass
 
 import jax
@@ -80,7 +81,9 @@ def init_params(spec_tree, key: jax.Array):
     flat, treedef = jax.tree_util.tree_flatten_with_path(spec_tree, is_leaf=is_spec)
     leaves = []
     for path, spec in flat:
-        sub = jax.random.fold_in(key, hash(_path_str(path)) % (2**31))
+        # stable per-path salt (str hash() is salted per process)
+        salt = zlib.crc32(_path_str(path).encode()) % (2**31)
+        sub = jax.random.fold_in(key, salt)
         leaves.append(_init_leaf(spec, sub))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

@@ -111,8 +111,12 @@ def autoscale(routed, carbon, cfg: ReplicaConfig,
             opt = (k_idx > lo[:, None]) & (k_idx <= desired[:, None])
             mand_flat = np.where(mand, g, 0.0).ravel()
             mand_g = float(np.cumsum(mand_flat)[-1]) if mand_flat.size else 0.0
-            eff = w / np.maximum(g, 1e-300)
-            score = np.where(opt, -eff, np.inf).ravel()
+            # zero-gram entries (carbon intensity 0) are free: admit them
+            # first (-inf score) instead of dividing — w/tiny overflows
+            free = g <= 0.0
+            eff = w / np.where(free, 1.0, g)
+            score = np.where(opt, np.where(free, -np.inf, -eff),
+                             np.inf).ravel()
             order = np.argsort(score, kind="stable")
             gs = np.where(opt, g, 0.0).ravel()[order]
             cum = np.cumsum(gs)
@@ -177,8 +181,10 @@ def autoscale_scalar(routed, carbon, cfg: ReplicaConfig,
                         mand_g += g
                     is_opt = lo[r] < k <= desired[r]
                     opt_flat.append(is_opt)
-                    eff = w / max(g, 1e-300)
-                    score[i] = -eff if is_opt else np.inf
+                    # same zero-gram guard as the vectorized path
+                    eff = 0.0 if g <= 0.0 else w / g
+                    sc = -np.inf if g <= 0.0 else -eff
+                    score[i] = sc if is_opt else np.inf
             order = sorted(range(R * K), key=lambda i: score[i])
             counts = [0] * R
             cum = 0.0

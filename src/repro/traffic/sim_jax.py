@@ -144,8 +144,11 @@ def traffic_step(spec: TrafficSpec, rep0, req_row, c_row):
         mand = k_idx <= lo[:, None]
         opt = (k_idx > lo[:, None]) & (k_idx <= desired[:, None])
         mand_g = jnp.cumsum(jnp.where(mand, g, 0.0).ravel())[-1]
-        eff = w / jnp.maximum(g, 1e-300)
-        score2 = jnp.where(opt, -eff, jnp.inf).ravel()
+        # zero-gram guard: free entries admitted first, no overflow div
+        freeg = g <= 0.0
+        eff = w / jnp.where(freeg, 1.0, g)
+        score2 = jnp.where(opt, jnp.where(freeg, -jnp.inf, -eff),
+                           jnp.inf).ravel()
         order = jnp.argsort(score2)                    # stable by default
         gs = jnp.where(opt, g, 0.0).ravel()[order]
         cum_g = jnp.cumsum(gs)

@@ -127,7 +127,18 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+    def last_info(self) -> Optional[dict]:
+        """Info dict of the most recent completed save (waits for an
+        in-flight async save first). The public accessor for what
+        `save()` recorded — callers must not reach into `_last_info`."""
+        self.wait()
+        return self._last_info
+
+    def save(self, step: int, state: Any,
+             extra: Optional[dict] = None) -> Optional[dict]:
+        """Write a checkpoint; returns its info dict for synchronous
+        saves (async saves return None — use `last_info()` after
+        `wait()`, which also covers the sync case)."""
         self.wait()
         # snapshot to host synchronously (cheap vs write), write async
         host = jax.tree.map(np.asarray, state)
@@ -139,8 +150,9 @@ class CheckpointManager:
         if self.async_save:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
-        else:
-            work()
+            return None
+        work()
+        return self._last_info
 
     def restore(self, abstract_state: Any, *, step: Optional[int] = None,
                 shardings: Any = None) -> tuple:

@@ -1,0 +1,127 @@
+"""Causal forecasters (`repro.carbon.forecast`).
+
+Causality is the load-bearing property — the elasticity ablation is
+meaningless if a forecaster peeks at the epoch it predicts — so every
+estimator is tested by perturbing the future and asserting the past
+predictions don't move.
+"""
+import numpy as np
+import pytest
+
+from repro.carbon.forecast import (ar1_mean, diurnal_ar1, forecast_series,
+                                   persistence, window_mean_forecast)
+from repro.carbon.traces import synth_trace
+
+MODES = ["persistence", "ar1_mean", "diurnal_ar1"]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_causality_future_perturbation_invariant(mode):
+    rng = np.random.default_rng(0)
+    x = np.abs(rng.normal(5.0, 2.0, (96, 3)))
+    y = x.copy()
+    y[60:] *= 17.0                       # rewrite the future
+    a = forecast_series(x, mode, period_steps=24)
+    b = forecast_series(y, mode, period_steps=24)
+    # prediction at t reads x[0..t-1] only -> t <= 60 identical
+    np.testing.assert_array_equal(a[:61], b[:61])
+    assert np.any(a[61:] != b[61:])
+
+
+def test_shapes_and_first_step():
+    x1 = np.arange(10.0)
+    x2 = np.arange(20.0).reshape(10, 2)
+    for mode in ["oracle"] + MODES:
+        a = forecast_series(x1, mode, period_steps=4)
+        b = forecast_series(x2, mode, period_steps=4)
+        assert a.shape == x1.shape and b.shape == x2.shape
+        # epoch 0 uses the epoch-start reading
+        assert a[0] == x1[0]
+        np.testing.assert_array_equal(b[0], x2[0])
+
+
+def test_persistence_is_shift():
+    x = np.array([3.0, 1.0, 4.0, 1.0, 5.0])
+    np.testing.assert_array_equal(persistence(x),
+                                  np.array([3.0, 3.0, 1.0, 4.0, 1.0]))
+
+
+def test_predictions_clamped_nonnegative():
+    x = np.array([5.0, 0.0, 0.0, 0.0, 10.0, 0.0])
+    for mode in MODES:
+        assert forecast_series(x, mode, period_steps=3).min() >= 0.0
+
+
+def test_ar1_mean_matches_online_definition():
+    rng = np.random.default_rng(1)
+    x = np.abs(rng.normal(3.0, 1.0, 40))
+    out = ar1_mean(x, rho=0.7)
+    for t in range(1, 40):
+        mu = x[:t].mean()
+        assert out[t] == pytest.approx(max(0.0, mu + 0.7 * (x[t - 1] - mu)),
+                                       abs=1e-12)
+
+
+def test_diurnal_beats_persistence_on_synth_trace():
+    # hourly synth trace: known diurnal + AR(1, rho=0.9) structure.
+    # After a warmup cycle the diurnal estimator must dominate.
+    x = synth_trace("PL", hours=24 * 10, seed=3)
+
+    def mae(mode):
+        f = forecast_series(x, mode, period_steps=24, rho=0.9)
+        return np.abs(f[24:] - x[24:]).mean()
+
+    assert mae("diurnal_ar1") < mae("ar1_mean") < mae("persistence")
+
+
+def test_diurnal_ar1_rejects_bad_period():
+    with pytest.raises(ValueError):
+        diurnal_ar1(np.arange(5.0), period_steps=0)
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        forecast_series(np.arange(4.0), "magic")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_window_mean_causality(mode):
+    rng = np.random.default_rng(4)
+    x = np.abs(rng.normal(5.0, 2.0, 96))
+    y = x.copy()
+    y[60:] *= 17.0
+    a = window_mean_forecast(x, mode, period_steps=24)
+    b = window_mean_forecast(y, mode, period_steps=24)
+    np.testing.assert_array_equal(a[:61], b[:61])
+
+
+def test_window_mean_oracle_and_persistence():
+    x = np.abs(300.0 + 100.0 * np.sin(2 * np.pi * np.arange(72) / 24.0))
+    o = window_mean_forecast(x, "oracle", period_steps=24)
+    # true forward-window mean, truncated at the end
+    assert o[10] == pytest.approx(x[10:34].mean(), abs=1e-12)
+    assert o[60] == pytest.approx(x[60:].mean(), abs=1e-12)
+    # persistence believes the signal is flat: window mean == nowcast
+    np.testing.assert_array_equal(window_mean_forecast(x, "persistence",
+                                                       period_steps=24),
+                                  persistence(x))
+
+
+def test_window_mean_diurnal_learns_day_mean():
+    x = synth_trace("NL", hours=24 * 8, seed=5)
+    w = window_mean_forecast(x, "diurnal_ar1", period_steps=24)
+    p = window_mean_forecast(x, "persistence", period_steps=24)
+    truth = window_mean_forecast(x, "oracle", period_steps=24)
+    # after a learned cycle the diurnal day-mean beats the flat belief
+    sl = slice(24, -24)
+    assert np.abs(w[sl] - truth[sl]).mean() \
+        < np.abs(p[sl] - truth[sl]).mean()
+
+
+def test_window_mean_rejects_bad_input():
+    with pytest.raises(ValueError):
+        window_mean_forecast(np.zeros((5, 2)), "oracle")
+    with pytest.raises(ValueError):
+        window_mean_forecast(np.arange(5.0), "oracle", period_steps=0)
+    with pytest.raises(ValueError):
+        window_mean_forecast(np.arange(5.0), "magic")

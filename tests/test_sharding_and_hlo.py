@@ -40,9 +40,10 @@ def test_pod_axis_multiplies_batch():
     mesh = _fake_mesh((2, 2, 2), ("pod", "data", "model"))
     p = logical_to_pspec(("batch", None), (8, 4), mesh)
     assert p == jax.sharding.PartitionSpec(("pod", "data"), None)
-    # batch=2: keeps pod only
+    # batch=2: keeps pod only (single mesh axes are unwrapped to the
+    # bare name, so compare against the unwrapped form)
     p = logical_to_pspec(("batch", None), (2, 4), mesh)
-    assert p == jax.sharding.PartitionSpec(("pod",), None)
+    assert p == jax.sharding.PartitionSpec("pod", None)
 
 
 HLO_SAMPLE = """

@@ -182,6 +182,32 @@ def test_autoscale_budget_cap_binds():
     assert un.emissions_g.sum() > res.emissions_g.sum()
 
 
+def test_autoscale_zero_intensity_parity():
+    # a zero-carbon epoch makes every replica free: both backends must
+    # admit the free entries first, agree exactly, and not trip numpy's
+    # overflow warning (the old 1e-300 guard scored them ~1e300)
+    import warnings
+    rng = np.random.default_rng(6)
+    T, R = 24, 3
+    routed = rng.gamma(2.0, 60_000.0, (T, R))
+    carbon = 100.0 + 500.0 * rng.random((T, R))
+    carbon[5] = 0.0                       # whole epoch free
+    carbon[11, 1] = 0.0                   # one free region among paid ones
+    cfg = ReplicaConfig(max_replicas=8, min_replicas=0, max_step=8,
+                        budget_g_per_epoch=2.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        av = autoscale(routed, carbon, cfg)
+        asr = autoscale_scalar(routed, carbon, cfg)
+    np.testing.assert_array_equal(av.replicas, asr.replicas)
+    for f in ("served", "dropped", "emissions_g"):
+        assert np.max(np.abs(getattr(av, f) - getattr(asr, f))) <= TOL, f
+    # free epoch: demand fully served up to capacity, zero grams booked
+    assert np.all(av.emissions_g[5] == 0.0)
+    assert np.all(av.replicas[5] == np.minimum(
+        np.ceil(routed[5] / av.cap1), cfg.max_replicas))
+
+
 def test_replica_config_validation():
     with pytest.raises(ValueError):
         ReplicaConfig(min_replicas=5, max_replicas=2)

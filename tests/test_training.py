@@ -106,6 +106,22 @@ def test_async_checkpoint():
         assert mgr.latest_step() == 5
 
 
+def test_save_returns_info_and_last_info_accessor():
+    # sync save() returns the info dict; async returns None but
+    # last_info() waits and exposes it — callers never need _last_info
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CKPT.CheckpointManager(d, keep=2, async_save=False)
+        info = mgr.save(1, {"w": jnp.arange(16, dtype=jnp.float32)})
+        assert info is not None and info.get("bytes", 0) > 0
+        assert mgr.last_info() == info
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CKPT.CheckpointManager(d, keep=2, async_save=True)
+        assert mgr.save(2, {"w": jnp.arange(16, dtype=jnp.float32)}) is None
+        info = mgr.last_info()                 # waits for the writer
+        assert info is not None and info.get("bytes", 0) > 0
+        assert mgr.latest_step() == 2
+
+
 def test_compression_error_feedback():
     g = {"w": jnp.asarray(np.linspace(-1, 1, 64), jnp.float32)}
     ef = COMP.ef_init(g)
