@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test bench-fleet bench bench-gate placement jax-sweep traffic elasticity
+.PHONY: test-fast test bench-fleet bench bench-gate placement jax-sweep traffic elasticity scenarios
 
 # Fast lane: carbon-core + fleet + placement tests (seconds, no JAX
 # model compiles)
@@ -23,7 +23,7 @@ bench-fleet:
 # warmup_s, never gated).
 bench-gate:
 	$(PY) -m benchmarks.run \
-		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax,placement_sweep_pallas,traffic_sweep,elasticity_sweep \
+		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax,placement_sweep_pallas,traffic_sweep,elasticity_sweep,energy_sweep \
 		--fast true --json benchmarks/out/ci.json
 	$(PY) -m benchmarks.check_regression benchmarks/out/ci.json \
 		--min fleet_sweep.speedup_x=10 \
@@ -59,7 +59,12 @@ bench-gate:
 		--min elasticity_sweep.oracle_savings_frac=0.01 \
 		--min elasticity_sweep.work_ratio=0.9 \
 		--max elasticity_sweep.sweep_parity_max_abs_diff=1e-6 \
-		--min elasticity_sweep.sweep_levels_equal=1
+		--min elasticity_sweep.sweep_levels_equal=1 \
+		--max energy_sweep.overhead_frac=0.10 \
+		--max energy_sweep.energy_conservation_max_err_w=1e-6 \
+		--max energy_sweep.energy_cap_violations=0 \
+		--max energy_sweep.energy_soc_violations=0 \
+		--max energy_sweep.sweep_parity_max_rel_diff=1e-6
 
 # Multi-region placement demo: heterogeneous fleet migrating between
 # low- and high-variability grids vs the frozen no-migration baseline
@@ -87,13 +92,26 @@ jax-sweep:
 		--min jax_sweep_scale.container_epochs_per_s=1000000 \
 		--max jax_sweep_scale.peak_rss_mb=4096 \
 		--max jax_sweep_scale.over_capacity_epochs=0 \
-		--max jax_sweep_scale.elastic_cap_violations=0
+		--max jax_sweep_scale.elastic_cap_violations=0 \
+		--max jax_sweep_scale.energy_conservation_max_err_w=1e-6 \
+		--max jax_sweep_scale.energy_cap_violations=0 \
+		--max jax_sweep_scale.energy_soc_violations=0
 
 # Per-container elasticity demo: K-level CarbonScaler marginal
 # allocation under a shaped fleet carbon budget, with the
 # oracle/forecast/persistence forecaster ablation
 elasticity:
 	$(PY) examples/elasticity_demo.py
+
+# Scenario stress matrix: every named scenario (fleet churn, grid
+# outage, correlated intensity shock, migration failures, stragglers,
+# demand burst) as a full-shape sweep on BOTH array backends, with the
+# energy invariants (conservation, zero cap/SoC violations) and
+# fleet<->jax parity checked per cell. Exits non-zero on any violation.
+# The fast-lane pytest table (tests/test_scenarios.py) runs the same
+# matrix at small shapes.
+scenarios:
+	$(PY) -m repro.energy.scenarios
 
 bench:
 	$(PY) -m benchmarks.run

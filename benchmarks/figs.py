@@ -649,11 +649,17 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     fleet scan (compact demand + in-step target tiling; no (T, N) array
     on host or device) — with the carbon-aware traffic subsystem folded
     in: a 1M-user request population is routed and autoscaled per epoch
-    and modulates every container's demand, and the per-container
-    elasticity layer runs its own compact-width scan (the (N·K,)
-    marginal-allocation argsort per epoch, under a shaped fleet carbon
-    budget) whose served demand feeds the fleet scan. The 4 GB RSS
-    ceiling holds with both layers enabled.
+    and modulates every container's demand, the virtual energy supply
+    layer runs the host supply ledger on the compact fleet (solar +
+    battery + grid with a mid-day regional outage; cap_frac applied on
+    host, carbon billed at the delivered mix through the indexed
+    (c_eff, codes) layout so no (T, N) carbon matrix appears), and the
+    per-container elasticity layer runs its own compact-width scan (the
+    (N·K,) marginal-allocation argsort per epoch, under a shaped fleet
+    carbon budget) whose served demand feeds the fleet scan. The 4 GB
+    RSS ceiling holds with all three layers enabled, and the energy
+    invariants (conservation, zero cap/SoC violations) gate alongside
+    the throughput floor.
 
     Headline numbers: `container_epochs_per_s` = N * T / steady_s
     (steady state: second sweep call, jit cache warm), `warmup_s`
@@ -672,6 +678,7 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     from repro.core.elasticity import ElasticityConfig
     from repro.core.policy import CarbonContainerPolicy
     from repro.core.simulator import SimConfig, sweep_population
+    from repro.energy import EnergyConfig, GridEventConfig
     from repro.traffic import TrafficConfig, UserPopulation
     from repro.traffic.autoscale import ReplicaConfig
     from repro.workload.azure_like import sample_population_matrix
@@ -699,11 +706,16 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     elastic = ElasticityConfig(k_levels=4, unit_capacity=0.3,
                                budget_g_per_epoch=2.5 * n_traces,
                                forecast="forecast", shape_budget=True)
+    T_ep = 288 * days
+    energy = EnergyConfig(events=GridEventConfig(
+        outages=((1, T_ep // 3, T_ep // 24),),
+        shocks=((-1, T_ep // 2, T_ep // 12, 1.6),)))
 
     def _sweep():
         return sweep_population(policies, fam, demand, None, targets, cfg,
                                 backend="jax", placement=eng,
-                                traffic=traffic, elasticity=elastic)
+                                traffic=traffic, elasticity=elastic,
+                                energy=energy)
 
     t0 = time.perf_counter()
     rows_w = _sweep()
@@ -741,6 +753,13 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
         "elastic_served_frac": rows_jax[0]["elastic_served_frac"],
         "elastic_level_epochs": rows_jax[0]["elastic_level_epochs"],
         "elastic_cap_violations": rows_jax[0]["elastic_cap_violations"],
+        "energy_conservation_max_err_w":
+            rows_jax[0]["energy_conservation_max_err_w"],
+        "energy_cap_violations": int(rows_jax[0]["energy_cap_violations"]),
+        "energy_soc_violations": int(rows_jax[0]["energy_soc_violations"]),
+        "energy_outage_epochs": int(rows_jax[0]["energy_outage_epochs"]),
+        "energy_solar_frac": rows_jax[0]["energy_solar_frac"],
+        "energy_unmet_frac": rows_jax[0]["energy_unmet_frac"],
     }
     return rows, derived
 
@@ -1044,3 +1063,81 @@ def elasticity_sweep(n_containers: int = 2000, days: int = 10):
         "sweep_levels_equal": int(sweep_levels_equal),
     }
     return rows, derived
+
+
+def energy_sweep(n_containers: int = 400, days: int = 4):
+    """The virtual energy supply layer's benchmark-gate entry.
+
+    One placed fleet sweep run three ways through the declarative
+    `SweepSpec` surface: energy off vs energy on (interleaved best-of
+    timing, so `overhead_frac` — the cost of the supply ledger, the
+    virtual-cap gather, and the delivered-mix billing — is measured
+    under identical host load), then the energy-on sweep again on the
+    jax backend. Gated claims:
+
+      - `overhead_frac` <= 0.10: the energy layer costs at most 10% of
+        the plain fleet sweep.
+      - `energy_conservation_max_err_w` / `energy_cap_violations` /
+        `energy_soc_violations`: the supply ledger balances to float
+        precision and the software-defined caps and battery bounds hold
+        by construction, under a mid-sweep outage and a correlated
+        intensity spike.
+      - `sweep_parity_max_rel_diff` <= 1e-6: fleet vs jax backends
+        agree on every shared numeric row metric with the energy layer
+        folded in (read off `SweepResult.parity`, the uniform accessor
+        the gate exists to exercise).
+    """
+    from repro.carbon.intensity import TraceProvider
+    from repro.cluster.placement import PlacementConfig
+    from repro.cluster.slices import paper_family
+    from repro.core.policy import CarbonContainerPolicy
+    from repro.core.simulator import SimConfig
+    from repro.core.spec import SweepSpec
+    from repro.energy import EnergyConfig, GridEventConfig
+    from repro.workload.azure_like import sample_population_matrix
+
+    fam = paper_family()
+    regions = ("PL", "NL", "CAISO")
+    provs = [TraceProvider.for_region(r, hours=24 * days, seed=1)
+             for r in regions]
+    demand = sample_population_matrix(n_containers, days=days, seed=2)
+    T = demand.shape[0]
+    en = EnergyConfig(events=GridEventConfig(
+        outages=((1, T // 4, T // 24),),
+        shocks=((-1, T // 2, T // 12, 2.0),)))
+    pols = {"carbon_containers":
+            lambda: CarbonContainerPolicy(variant="energy")}
+
+    def _spec(backend, energy):
+        return SweepSpec(
+            policies=pols, family=fam, traces=demand,
+            targets=[30.0, 60.0], sim=SimConfig(target_rate=0.0),
+            backend=backend,
+            placement=PlacementConfig(
+                capacity=int(np.ceil(0.6 * n_containers)), min_dwell=6),
+            regions=provs, region_names=regions, energy=energy)
+
+    res_off, off_s, res_on, on_s = _best_of_interleaved(
+        lambda: _spec("fleet", None).run(),
+        lambda: _spec("fleet", en).run(), rounds=3, fast_reps=1)
+    res_jax = _spec("jax", en).run()
+
+    r0 = res_on[0]
+    derived = {
+        "n_containers": n_containers,
+        "n_epochs": T,
+        "fleet_s": off_s,
+        "fleet_energy_s": on_s,
+        "overhead_frac": on_s / off_s - 1.0,
+        "energy_conservation_max_err_w": r0["energy_conservation_max_err_w"],
+        "energy_cap_violations": int(r0["energy_cap_violations"]),
+        "energy_soc_violations": int(r0["energy_soc_violations"]),
+        "energy_outage_epochs": int(r0["energy_outage_epochs"]),
+        "energy_solar_frac": r0["energy_solar_frac"],
+        "energy_unmet_frac": r0["energy_unmet_frac"],
+        "energy_cap_frac_min": r0["energy_cap_frac_min"],
+        "sweep_parity_max_rel_diff": res_on.parity(res_jax),
+        "capped_vs_plain_carbon_delta":
+            r0["carbon_rate_mean"] - res_off[0]["carbon_rate_mean"],
+    }
+    return list(res_on), derived

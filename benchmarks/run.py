@@ -108,6 +108,11 @@ def main() -> None:
         ("elasticity_sweep", figs.elasticity_sweep,
          {"n_containers": 300, "days": 4} if fast
          else {"n_containers": 2000, "days": 10}),
+        # virtual energy supply: overhead vs plain fleet sweep, supply
+        # ledger invariants, fleet-vs-jax parity through SweepSpec
+        ("energy_sweep", figs.energy_sweep,
+         {"n_containers": 200, "days": 2} if fast
+         else {"n_containers": 400, "days": 4}),
     ]
     only = args.get("only")
     only_set = set(only.split(",")) if only else None

@@ -90,7 +90,8 @@ def main():
     from repro.cluster.placement import PlacementConfig, PlacementEngine
     from repro.cluster.slices import paper_family
     from repro.core.policy import CarbonContainerPolicy
-    from repro.core.simulator import SimConfig, sweep_population
+    from repro.core.simulator import SimConfig
+    from repro.core.spec import SweepSpec
     from repro.workload.azure_like import sample_population
 
     fam = paper_family()
@@ -102,16 +103,16 @@ def main():
                           shape_budget=True)
     pols = {"carbon_containers":
             lambda: CarbonContainerPolicy(variant="energy")}
-    mk_eng = lambda: PlacementEngine(
-        fam, provs, region_names=REGIONS,
-        config=PlacementConfig(capacity=64, min_dwell=6))
     print(f"\nplaced sweep with elasticity (64 traces, both backends):")
     for backend in ("fleet", "jax"):
         try:
-            rows = sweep_population(pols, fam, traces, None, [40.0],
-                                    SimConfig(target_rate=0.0),
-                                    backend=backend, placement=mk_eng(),
-                                    elasticity=ec)
+            rows = SweepSpec(policies=pols, family=fam, traces=traces,
+                             targets=[40.0], sim=SimConfig(target_rate=0.0),
+                             backend=backend,
+                             placement=PlacementConfig(capacity=64,
+                                                       min_dwell=6),
+                             regions=provs, region_names=REGIONS,
+                             elasticity=ec).run()
         except ImportError:
             print(f"  {backend:>6}: jax unavailable, skipped")
             continue

@@ -181,7 +181,8 @@ def jax_sweep(n_containers: int = 10080, n_targets: int = 12,
     epoch, then one jit/scan per policy sweeps all (target x trace)
     columns — against the same sweep on the NumPy fleet backend."""
     from repro.core.policy import CarbonContainerPolicy
-    from repro.core.simulator import SimConfig, sweep_population
+    from repro.core.simulator import SimConfig
+    from repro.core.spec import SweepSpec
 
     from repro.workload.azure_like import sample_population_matrix
 
@@ -208,17 +209,18 @@ def jax_sweep(n_containers: int = 10080, n_targets: int = 12,
     print(f"--- jax sweep: {n_total} placed containers "
           f"({n_traces} traces x {n_targets} targets, {T} epochs, "
           f"capacity {cap}/region) ---")
+    spec = SweepSpec(policies=policies, family=fam, traces=traces,
+                     targets=targets, sim=cfg, backend="jax", placement=eng)
     t0 = time.perf_counter()
-    rows = sweep_population(policies, fam, traces, None, targets, cfg,
-                            backend="jax", placement=eng)
+    rows = spec.run()
     warm = time.perf_counter() - t0
     t0 = time.perf_counter()
-    rows = sweep_population(policies, fam, traces, None, targets, cfg,
-                            backend="jax", placement=eng)
+    rows = spec.run()
     steady = time.perf_counter() - t0
     t0 = time.perf_counter()
-    rows_np = sweep_population(policies, fam, traces, None, targets, cfg,
-                               backend="fleet", placement=eng)
+    rows_np = SweepSpec(policies=policies, family=fam, traces=traces,
+                        targets=targets, sim=cfg, backend="fleet",
+                        placement=eng).run()
     numpy_s = time.perf_counter() - t0
     drift = max(abs(a["carbon_rate_mean"] - b["carbon_rate_mean"])
                 for a, b in zip(rows, rows_np))

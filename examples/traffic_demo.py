@@ -22,7 +22,8 @@ from repro.carbon.intensity import TraceProvider
 from repro.cluster.placement import PlacementConfig, PlacementEngine
 from repro.cluster.slices import paper_family
 from repro.core.policy import CarbonContainerPolicy
-from repro.core.simulator import SimConfig, sweep_population
+from repro.core.simulator import SimConfig
+from repro.core.spec import SweepSpec
 from repro.traffic import (RoutingConfig, TrafficConfig, UserPopulation,
                            request_matrix, simulate_traffic)
 from repro.traffic.autoscale import ReplicaConfig
@@ -80,10 +81,12 @@ def main():
                           config=PlacementConfig(capacity=24, min_dwell=6))
     tc = TrafficConfig(population=pop, replicas=reps,
                        routing=RoutingConfig(slo_ms=200.0))
-    rows = sweep_population(
-        {"carbon_containers": lambda: CarbonContainerPolicy("energy")},
-        fam, traces, None, [30.0, 60.0], SimConfig(target_rate=0.0),
-        backend="fleet", placement=eng, traffic=tc)
+    rows = SweepSpec(
+        policies={"carbon_containers":
+                  lambda: CarbonContainerPolicy("energy")},
+        family=fam, traces=traces, targets=[30.0, 60.0],
+        sim=SimConfig(target_rate=0.0), backend="fleet", placement=eng,
+        traffic=tc).run()
     print("\nplaced fleet sweep with traffic-modulated demand:")
     for r in rows:
         print(f"  target {r['target']:>5.1f}: carbon rate "

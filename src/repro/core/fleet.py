@@ -616,14 +616,15 @@ class BlockPolicy:
 # ---------------------------------------------------------------------------
 
 def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
-                          placement, plan_fn, tile: bool = True):
+                          placement, plan_fn, tile: bool = True,
+                          energy=None):
     """Shared sweep prologue for the fleet and jax backends (one
     implementation so the two can never drift on what sweeps they
     accept): stack the equal-length traces into the policy-block demand
     matrix, tile targets, and — with a placement engine — compute the
     shared region plan on the real n_tr-column fleet via `plan_fn` and
     substitute the planned per-container carbon matrix. Returns
-    (demand_one, tgt_one, carbon, plan, n_tr, n_tg).
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up).
 
     With ``tile=False`` (the jax backend's memory-lean placed sweep)
     the demand matrix stays compact — (T, n_tr), NOT target-tiled —
@@ -631,7 +632,14 @@ def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
     back as None; the caller feeds the plan's indexed form to the
     simulator instead). At the N=1M target (n_tr=100k x n_tg=10,
     T=288) the tiled (T, N) f64 matrices are ~2.3 GB apiece on the
-    host; the compact path never builds them."""
+    host; the compact path never builds them.
+
+    With ``energy`` (a `repro.energy.EnergyConfig`; requires
+    `placement`), the grid-event layer perturbs the engine's (T, R)
+    region-intensity matrix *before planning* — shocks multiply the
+    grid intensity the planner (and the traffic/elasticity layers,
+    via `plan.region_intensity`) consume — and the (T, R) `grid_up`
+    outage mask is returned for the supply simulation."""
     if isinstance(traces, np.ndarray) and traces.ndim == 2:
         stack = np.asarray(traces, dtype=np.float64)   # (T, n_tr) direct
     else:
@@ -647,6 +655,11 @@ def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
     tgt_one = np.repeat(np.asarray(targets, dtype=np.float64), n_tr)
 
     plan = None
+    grid_up = None
+    if energy is not None and placement is None:
+        raise ValueError("energy=EnergyConfig(...) requires a placement "
+                         "engine (placement=...): the supply side — "
+                         "solar, battery, grid events — is per region")
     if placement is not None:
         if float(placement.interval_s) != float(cfg_base.interval_s):
             raise ValueError(
@@ -654,6 +667,15 @@ def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
                 f"{placement.interval_s} but the sweep simulates at "
                 f"interval_s={cfg_base.interval_s}; construct the engine "
                 f"with the sweep's interval")
+        if energy is not None:
+            import copy
+            from repro.energy.supply import event_matrices
+            T = stack.shape[0]
+            raw = placement._region_matrix(T)
+            shock_mult, grid_up = event_matrices(energy.events, T,
+                                                 placement.n_regions)
+            placement = copy.copy(placement)
+            placement.regions = raw * shock_mult
         demand_plan = stack
         if demand_scale is not None and np.any(
                 np.asarray(demand_scale) != 1.0):
@@ -661,7 +683,7 @@ def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
         plan = plan_fn(placement, demand_plan)
         carbon = (np.tile(plan.carbon_matrix(), (1, n_tg)) if tile
                   else None)
-    return demand_one, tgt_one, carbon, plan, n_tr, n_tg
+    return demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up
 
 
 def _prepare_traffic(traffic, plan, T: int, interval_s: float):
@@ -688,12 +710,51 @@ def _prepare_traffic(traffic, plan, T: int, interval_s: float):
     return arr, res
 
 
+def _prepare_energy(energy, family, plan, comp, T: int, interval_s: float,
+                    grid_up):
+    """Shared energy prologue for the fleet and jax sweep backends: run
+    the host supply simulation on the compact fleet's per-region
+    flexible load and gather the two per-container signals. Returns
+    ``(spec, SupplyResult, solar (T, R), cap_cols (T, n_tr),
+    ceff_cols (T, n_tr))``.
+
+    `comp` is the compact (T, n_tr) demand *after* demand_scale and the
+    traffic modulation (pinned layer order: demand_scale -> traffic ->
+    energy -> elasticity). The region load is the fleet's flexible
+    power, linear in demand (see repro.energy.supply docstring), so
+    enforcing the virtual cap by scaling demand with `cap_frac` lands
+    exactly on the supplied power. Both backends call this one helper —
+    the supply ledger and the `energy_*` row metrics are bit-identical
+    across backends; only the *application* of cap_frac/c_eff differs
+    (host gather on the fleet path, in-scan fold on the jax path)."""
+    from repro.energy.supply import (EnergySpec, flex_w_per_unit,
+                                     simulate_supply, solar_series)
+    R = plan.n_regions
+    n_tr = comp.shape[1]
+    spec = EnergySpec.from_config(energy, n_tr, R, interval_s,
+                                  flex_w_per_unit(family))
+    solar = solar_series(energy.solar, T, R, interval_s, spec.solar_peak_w)
+    assign = plan.assign[:T]
+    load = np.zeros((T, R), dtype=np.float64)
+    for r in range(R):
+        # where= keeps the per-region reduction temp at one bool mask
+        # (matters at the N=100k scale gate)
+        np.sum(comp, axis=1, where=(assign == r), out=load[:, r])
+    load *= spec.load_coef
+    sres = simulate_supply(load, solar, plan.region_intensity[:T], grid_up,
+                           spec)
+    rows = np.arange(T)[:, None]
+    cap_cols = sres.cap_frac[rows, assign]
+    ceff_cols = sres.c_eff[rows, assign]
+    return spec, sres, solar, cap_cols, ceff_cols
+
+
 def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                            carbon, targets: Sequence[float],
                            cfg_base: SimConfig,
                            demand_scale: float = 1.0,
                            placement=None, traffic=None,
-                           elasticity=None) -> list:
+                           elasticity=None, energy=None) -> list:
     """Fleet-backed `sweep_population`: batches every (policy x target x
     trace) combination into ONE FleetSimulator.run call (policy-major
     column blocks via BlockPolicy) and emits the same aggregate rows, in
@@ -720,15 +781,26 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
     allocation runs over the scaled + traffic-modulated compact demand
     before the fleet simulation; the fleet then advances on each
     container's *served* demand (unserved work deferred through the
-    backlog) and rows carry the `elastic_*` metrics. Order is pinned —
-    demand_scale, then traffic, then elasticity — and shared with the
-    jax backend so the parity chain holds with all layers on.
+    backlog) and rows carry the `elastic_*` metrics.
+
+    With `energy` (a `repro.energy.EnergyConfig`; requires
+    `placement`), the per-region virtual energy supply — solar +
+    battery + event-perturbed grid — runs over the compact fleet's
+    flexible load: grid-intensity shocks perturb the matrix the
+    planner/traffic/elasticity layers consume, each container's demand
+    is clamped by its region's virtual power-cap fraction, the fleet
+    (and the elasticity layer) bill emissions at the delivered mix's
+    *effective* intensity, and rows carry the `energy_*` supply
+    metrics. Order is pinned — demand_scale, then traffic, then
+    energy, then elasticity — and shared with the jax backend so the
+    parity chain holds with all layers on.
     """
-    (demand_one, tgt_one, carbon, plan, n_tr, n_tg) = \
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up) = \
         _prepare_sweep_inputs(traces, carbon, targets, cfg_base,
                               demand_scale, placement,
                               lambda eng, d: eng.plan(
-                                  d, state_gb=cfg_base.state_gb))
+                                  d, state_gb=cfg_base.state_gb),
+                              energy=energy)
     per_pol = n_tr * n_tg
     T = demand_one.shape[0]
 
@@ -739,29 +811,48 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
         mod = tres.demand_mod(traffic.demand_gain)       # (T, R)
         mod_cols = mod[np.arange(T)[:, None], plan.assign[:T]]   # (T, n_tr)
         traffic_summary = tres.summary()
-        if elasticity is None:
+        if elasticity is None and energy is None:
             demand_one = demand_one * np.tile(mod_cols, (1, n_tg))
 
-    elastic_summary = None
-    if elasticity is not None:
-        if plan is None:
-            raise ValueError("elasticity requires placement")
-        from repro.core.elasticity import simulate_elastic
+    # compact pipeline for the energy/elasticity layers: scale + traffic
+    # modulation applied once at (T, n_tr) width, layers in pinned order
+    comp = None
+    if energy is not None or elasticity is not None:
         comp = demand_one[:, :n_tr]
         if demand_scale is not None and np.any(
                 np.asarray(demand_scale) != 1.0):
             comp = comp * demand_scale
         if mod_cols is not None:
             comp = comp * mod_cols
+
+    energy_summary = None
+    ceff_reg = None
+    if energy is not None:
+        _, sres, _, cap_cols, ceff_cols = _prepare_energy(
+            energy, family, plan, comp, T, cfg_base.interval_s, grid_up)
+        energy_summary = sres.summary()
+        comp = comp * cap_cols              # enforce the virtual cap
+        carbon = np.tile(ceff_cols, (1, n_tg))   # bill the delivered mix
+        ceff_reg = sres.c_eff               # forecast the delivered mix too
+
+    elastic_summary = None
+    if elasticity is not None:
+        if plan is None:
+            raise ValueError("elasticity requires placement")
+        from repro.core.elasticity import simulate_elastic
         eres = simulate_elastic(
             comp, carbon[:, :n_tr], elasticity, cfg_base.interval_s,
             carbon_forecast=_elastic_carbon_forecast(
-                plan, T, elasticity, cfg_base.interval_s),
+                plan, T, elasticity, cfg_base.interval_s,
+                region_mat=ceff_reg),
             budget_series=_elastic_budget_series(
                 plan, T, elasticity, cfg_base.interval_s))
         demand_one = np.tile(eres.demand_served(), (1, n_tg))
         demand_scale = 1.0          # already applied ahead of the layer
         elastic_summary = eres.summary()
+    elif energy is not None:
+        demand_one = np.tile(comp, (1, n_tg))
+        demand_scale = 1.0          # already applied ahead of the layer
 
     sim = FleetSimulator(family, interval_s=cfg_base.interval_s,
                          suspend_releases_slice=cfg_base.suspend_releases_slice)
@@ -797,22 +888,27 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
             results[name] = (res, p * per_pol)
 
     return _aggregate_sweep_rows(policies, results, targets, n_tr, plan,
-                                 traffic_summary, elastic_summary)
+                                 traffic_summary, elastic_summary,
+                                 energy_summary)
 
 
-def _elastic_carbon_forecast(plan, T: int, elasticity,
-                             interval_s: float) -> np.ndarray:
+def _elastic_carbon_forecast(plan, T: int, elasticity, interval_s: float,
+                             region_mat=None) -> np.ndarray:
     """(T, n_tr) carbon estimates for the elasticity layer: forecast on
     the plan's compact (T, R) region matrix, then gather per container.
     The jax backend forecasts the same region matrix and applies its
     R-way select in-scan, so the two see bit-identical estimates
     (forecast-then-gather, never gather-then-forecast — containers
-    migrate between regions mid-trace)."""
+    migrate between regions mid-trace). `region_mat` overrides the
+    forecast signal: with the energy layer on, the scaler plans against
+    the delivered mix's (T, R) effective intensity — the series it is
+    actually billed at — not the raw grid."""
     from repro.carbon.forecast import forecast_series
     cmode = {"oracle": "oracle", "persistence": "persistence",
              "forecast": "diurnal_ar1"}[elasticity.forecast]
     period = max(1, int(round(24 * 3600.0 / float(interval_s))))
-    chat_reg = forecast_series(plan.region_intensity, cmode,
+    reg = plan.region_intensity if region_mat is None else region_mat
+    chat_reg = forecast_series(reg, cmode,
                                period_steps=period, rho=elasticity.rho)
     return chat_reg[np.arange(T)[:, None], plan.assign[:T]]
 
@@ -833,7 +929,7 @@ def _elastic_budget_series(plan, T: int, elasticity, interval_s: float):
 
 def _aggregate_sweep_rows(policies: dict, results: dict, targets, n_tr: int,
                           plan=None, traffic_summary=None,
-                          elastic_summary=None) -> list:
+                          elastic_summary=None, energy_summary=None) -> list:
     """Fold per-container FleetResult arrays into the sweep's aggregate
     rows. `results` maps policy name -> (FleetResult, column offset);
     shared by the fleet and jax sweep backends so the two emit the same
@@ -889,5 +985,8 @@ def _aggregate_sweep_rows(policies: dict, results: dict, targets, n_tr: int,
             if elastic_summary is not None:
                 # same sharing as traffic: one elastic pass per sweep
                 row.update(elastic_summary)
+            if energy_summary is not None:
+                # one supply simulation per sweep, shared by backends
+                row.update(energy_summary)
             rows.append(row)
     return rows

@@ -63,9 +63,9 @@ import numpy as np
 from repro.cluster.migration import MigrationCostModel
 from repro.cluster.slices import SliceFamily
 from repro.core.fleet import (FleetResult, _aggregate_sweep_rows,
-                              _elastic_budget_series, _prepare_run_inputs,
-                              _prepare_sweep_inputs, _prepare_traffic,
-                              _PEAK_WINDOW)
+                              _elastic_budget_series, _prepare_energy,
+                              _prepare_run_inputs, _prepare_sweep_inputs,
+                              _prepare_traffic, _PEAK_WINDOW)
 from repro.core.policy import K_MIGRATE, K_RESUME, K_STAY, K_SUSPEND
 from repro.core.simulator import SimConfig
 
@@ -446,11 +446,12 @@ _DECIDERS = {"agnostic": _decide_agnostic, "suspend_resume": _decide_sr,
 
 @partial(jax.jit if HAS_JAX else lambda f, **kw: f,
          static_argnames=("spec", "srs", "record", "tabs", "dt", "mig",
-                          "cmode", "n_rep", "R", "traffic"))
-def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None, *,
+                          "cmode", "n_rep", "R", "traffic", "energy"))
+def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
+                solar_mat=None, up_mat=None, *,
                 spec: tuple, srs: bool, record: bool, tabs: _TablesS,
                 dt: float, mig: tuple, cmode: str = "dense", n_rep: int = 1,
-                R: int = 0, traffic=None):
+                R: int = 0, traffic=None, energy=None):
     """One XLA computation: scan the staged epoch step over time.
 
     The carry is three packed arrays — f64 accumulators (6 + S + 1 rows:
@@ -489,6 +490,19 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None, *,
     accumulator row sums the modulated demand so `work_demanded` can be
     recovered without re-materializing it on host.
 
+    `energy` (a static `repro.energy.supply.EnergySpec`; indexed mode
+    only, with `solar_mat`/`up_mat` the (T, R) solar-generation and
+    grid-up tensors in xs) folds the virtual energy supply into the
+    same scan: each step sums the compact columns into the (R,)
+    per-region flexible load, advances the battery state of charge (an
+    (R,) carry) through `repro.energy.supply_jax.energy_step`, clamps
+    each column's demand by its region's virtual-cap fraction, and
+    swaps the carbon row for the delivered mix's effective intensity —
+    all before the n_rep tiling, pinned after the traffic modulation
+    (demand_scale -> traffic -> energy, same layer order as the fleet
+    backend). Reuses the traffic path's extra accumulator row for
+    `work_demanded`.
+
     Returns the final carry tuple (+ optional (T, N) power/served series).
     """
     if cmode == "indexed":
@@ -498,9 +512,12 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None, *,
     else:
         assert n_rep == 1, "n_rep tiling requires indexed carbon"
         assert traffic is None, "traffic fold requires indexed carbon"
+        assert energy is None, "energy fold requires indexed carbon"
         N = demand.shape[1]
     if traffic is not None:
         from repro.traffic.sim_jax import traffic_step
+    if energy is not None:
+        from repro.energy.supply_jax import energy_step
     S = tabs.n_slices
     decide = _DECIDERS[spec[0]]
     suspend_r = spec[0] == "suspend_resume"
@@ -516,10 +533,13 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None, *,
                  else jnp.zeros((), dtype=jnp.float64))
 
     tos_cols = jnp.arange(S + 1, dtype=jnp.int32)
-    n_acc = _ACC_ROWS + (1 if traffic is not None else 0)
+    n_acc = _ACC_ROWS + (1 if (traffic is not None or energy is not None)
+                         else 0)
     acc0 = jnp.zeros((n_acc, N), dtype=jnp.float64)
     rep0 = (jnp.full(R, float(traffic.min_rep), dtype=jnp.float64)
             if traffic is not None else None)
+    soc0 = (jnp.full(R, energy.soc0_wh, dtype=jnp.float64)
+            if energy is not None else None)
     dynf0 = jnp.stack([jnp.ones(N, dtype=jnp.float64),       # duty
                        jnp.zeros(N, dtype=jnp.float64)])     # migrating_s
     dyni0 = jnp.concatenate(
@@ -537,28 +557,51 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None, *,
             if use_peak else None)
 
     def step(st, x):
+        if energy is not None:
+            soc = st[-1]
+            st = st[:-1]
         if traffic is not None:
             rep = st[-1]
             st = st[:-1]
         if cmode == "indexed":
+            if energy is not None:
+                sol_row, up_row = x[-2], x[-1]
+                x = x[:-2]
             if traffic is not None:
                 d, code, c_row, req = x
                 # route this epoch's requests by the carbon row, scale
                 # the replica fleets; the serving loads modulate demand
                 rep1, t_outs = traffic_step(traffic, rep, req, c_row)
                 mod_row = t_outs[0]
+                mod = jnp.full(code.shape, mod_row[0], dtype=jnp.float64)
+                for r in range(1, R):
+                    mod = jnp.where(code == r, mod_row[r], mod)
+                d = d * mod
             else:
                 d, code, c_row = x
+            if energy is not None:
+                # virtual energy supply: the compact columns sum into
+                # the (R,) flexible-load row (linear in demand, see
+                # repro.energy.supply), one battery/solar/grid step
+                # advances the (R,) SoC carry, and the cap fraction +
+                # effective intensity come back through the same R-way
+                # selects as the carbon row
+                load_row = jnp.stack(
+                    [jnp.sum(jnp.where(code == r, d, 0.0))
+                     for r in range(R)]) * energy.load_coef
+                soc1, e_outs = energy_step(energy, soc, load_row,
+                                           sol_row, c_row, up_row)
+                cap_row, c_row = e_outs[5], e_outs[6]
+                capsel = jnp.full(code.shape, cap_row[0],
+                                  dtype=jnp.float64)
+                for r in range(1, R):
+                    capsel = jnp.where(code == r, cap_row[r], capsel)
+                d = d * capsel
             # R-way select chain over the epoch's (R,) region row — the
             # compact-width analogue of gathering region_mat[t, codes[t]]
             c = jnp.full(code.shape, c_row[0], dtype=jnp.float64)
             for r in range(1, R):
                 c = jnp.where(code == r, c_row[r], c)
-            if traffic is not None:
-                mod = jnp.full(code.shape, mod_row[0], dtype=jnp.float64)
-                for r in range(1, R):
-                    mod = jnp.where(code == r, mod_row[r], mod)
-                d = d * mod
             if n_rep > 1:
                 d = jnp.tile(d, n_rep)
                 c = jnp.tile(c, n_rep)
@@ -660,7 +703,7 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None, *,
                 power,                                  # -> energy_wh
                 served,                                 # -> work_done
                 jnp.maximum(0.0, d - served)]           # -> throttled
-        if traffic is not None:
+        if traffic is not None or energy is not None:
             rows.append(d)                              # -> work_demanded
         contribs = jnp.stack(rows)
         acc1 = acc + contribs
@@ -688,15 +731,22 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None, *,
                else (acc1, dynf1, dyni1))
         if traffic is not None:
             st1 = st1 + (rep1,)
+        if energy is not None:
+            st1 = st1 + (soc1,)
         return st1, ys
 
     st0 = ((acc0, dynf0, dyni0, win0) if use_peak
            else (acc0, dynf0, dyni0))
     if traffic is not None:
         st0 = st0 + (rep0,)
+    if energy is not None:
+        st0 = st0 + (soc0,)
     if cmode == "indexed":
-        xs = ((demand, codes, region_mat) if traffic is None
-              else (demand, codes, region_mat, req_mat))
+        xs = (demand, codes, region_mat)
+        if traffic is not None:
+            xs = xs + (req_mat,)
+        if energy is not None:
+            xs = xs + (solar_mat, up_mat)
     else:
         xs = (demand, cmat)
     carry, ys = lax.scan(step, st0, xs)
@@ -729,7 +779,7 @@ class FleetSimulatorJax:
 
     def run(self, policy, demand, carbon, targets, epsilon=0.05,
             state_gb=1.0, demand_scale=1.0, record: bool = False,
-            n_rep: int = 1, traffic=None) -> FleetResult:
+            n_rep: int = 1, traffic=None, energy=None) -> FleetResult:
         """Advance the fleet; same contract as `FleetSimulator.run`, plus
         the memory-lean indexed-carbon form: `carbon` may be a
         ``(region_mat (T, R), codes (T, n_cols) int)`` pair — a
@@ -743,6 +793,12 @@ class FleetSimulatorJax:
         req_mat (T, R))`` pair: the scan then also routes + autoscales
         the request tensor each epoch and modulates container demand by
         the per-region serving load (see `_fleet_scan`).
+
+        `energy` (indexed-carbon runs only) is an ``(EnergySpec,
+        solar_mat (T, R), grid_up (T, R))`` triple: the scan then also
+        advances the virtual energy supply each epoch, clamping demand
+        by the per-region virtual-cap fraction and billing emissions at
+        the delivered mix's effective intensity (see `_fleet_scan`).
         """
         spec = _policy_spec(policy)
         t = self.tables
@@ -750,6 +806,9 @@ class FleetSimulatorJax:
         indexed = isinstance(carbon, tuple)
         if traffic is not None and not indexed:
             raise ValueError("traffic fold requires indexed carbon "
+                             "(region_mat, codes)")
+        if energy is not None and not indexed:
+            raise ValueError("energy fold requires indexed carbon "
                              "(region_mat, codes)")
         if indexed:
             region_mat, codes = carbon
@@ -780,6 +839,16 @@ class FleetSimulatorJax:
                 if req_mat.shape != (T, R):
                     raise ValueError(f"traffic request tensor shape "
                                      f"{req_mat.shape}; expected {(T, R)}")
+            e_spec = solar_mat = up_mat = None
+            if energy is not None:
+                e_spec, solar_mat, up_mat = energy
+                solar_mat = np.asarray(solar_mat, dtype=np.float64)
+                up_mat = np.asarray(up_mat, dtype=np.float64)
+                if solar_mat.shape != (T, R) or up_mat.shape != (T, R):
+                    raise ValueError(
+                        f"energy solar/grid-up tensor shapes "
+                        f"{solar_mat.shape} / {up_mat.shape}; expected "
+                        f"{(T, R)}")
             targets = np.broadcast_to(
                 np.asarray(targets, dtype=np.float64), (N,))
             epsilon = np.broadcast_to(
@@ -824,13 +893,17 @@ class FleetSimulatorJax:
                     dm = jax.device_put(demand, dev)
                     rq = (jax.device_put(req_mat, dev)
                           if traffic is not None else None)
+                    sm = (jax.device_put(solar_mat, dev)
+                          if energy is not None else None)
+                    um = (jax.device_put(up_mat, dev)
+                          if energy is not None else None)
                     outs.append(_fleet_scan(
                         dm, cm,
                         jax.device_put(targets[lo:hi], dev),
                         jax.device_put(epsilon[lo:hi], dev),
-                        jax.device_put(state_gb[lo:hi], dev), rq,
+                        jax.device_put(state_gb[lo:hi], dev), rq, sm, um,
                         cmode="indexed", n_rep=hi_r - lo_r, R=R,
-                        traffic=t_spec, **kw))
+                        traffic=t_spec, energy=e_spec, **kw))
                 else:
                     lo = s * N // n_sh
                     hi = (s + 1) * N // n_sh
@@ -852,9 +925,9 @@ class FleetSimulatorJax:
                     for k in range(2))
 
         elapsed = float(np.cumsum(np.full(T, dt))[-1]) if T else 0.0
-        if traffic is not None:
-            # host demand is pre-modulation: the scan's fifth accumulator
-            # row carries the modulated per-container demand sums
+        if traffic is not None or energy is not None:
+            # host demand is pre-modulation/pre-cap: the scan's fifth
+            # accumulator row carries the effective per-container sums
             work_dem = acc[_ACC_ROWS] * dt
         else:
             work_dem = demand.sum(axis=0) * dt
@@ -889,7 +962,7 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                          cfg_base: SimConfig,
                          demand_scale: float = 1.0,
                          placement=None, traffic=None,
-                         elasticity=None,
+                         elasticity=None, energy=None,
                          admission_impl: str = "auto") -> list:
     """JAX-backed `sweep_population`: one device-resident scan per policy
     over all (target x trace) columns, same aggregate rows, same order,
@@ -915,10 +988,10 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                         admission_impl=admission_impl)
 
     compact = placement is not None
-    (demand_one, tgt_one, carbon, plan, n_tr, n_tg) = \
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up) = \
         _prepare_sweep_inputs(traces, carbon, targets, cfg_base,
                               demand_scale, placement, _plan,
-                              tile=not compact)
+                              tile=not compact, energy=energy)
     n_rep = 1
     if compact:
         carbon = (plan.region_intensity, plan.assign.astype(np.int32))
@@ -940,28 +1013,58 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
             run_traffic = (TrafficSpec.from_config(traffic,
                                                    cfg_base.interval_s),
                            arr.requests)
-        else:
-            # with elasticity the modulation must land *before* the
-            # demand forecasters, so it is applied host-side on the
-            # compact matrix (same floats as the fleet backend — the
-            # level counts then agree exactly, not just to 1e-6)
+        if elasticity is not None or energy is not None:
+            # the host-side compact pipeline (energy supply load,
+            # elasticity forecasters) needs the modulation as host
+            # floats — same gather as the fleet backend (with
+            # elasticity this also keeps the level counts exact, not
+            # just 1e-6-close)
             mod = tres.demand_mod(traffic.demand_gain)
             mod_cols = mod[np.arange(T)[:, None], plan.assign[:T]]
 
-    elastic_summary = None
-    if elasticity is not None:
-        if plan is None:
-            raise ValueError("elasticity requires placement")
-        from repro.core.elasticity_jax import simulate_elastic_jax
+    # compact host pipeline, pinned layer order (see the fleet backend):
+    # demand_scale -> traffic -> energy -> elasticity
+    comp = None
+    if energy is not None or elasticity is not None:
         comp = demand_one                       # compact (T, n_tr)
         if demand_scale is not None and np.any(
                 np.asarray(demand_scale) != 1.0):
             comp = comp * demand_scale
         if mod_cols is not None:
             comp = comp * mod_cols
+
+    energy_summary = None
+    run_energy = None
+    if energy is not None:
+        spec_e, sres, solar_mat, cap_cols, ceff_cols = _prepare_energy(
+            energy, family, plan, comp, T, cfg_base.interval_s, grid_up)
+        energy_summary = sres.summary()
+        if elasticity is None:
+            # in-scan fold: the scan re-derives the supply ledger on
+            # device from the (traffic-modulated) demand and applies
+            # cap/c_eff per epoch; the energy_* row metrics above come
+            # from the shared host simulation (the two agree <=1e-6,
+            # pinned by the energy tests)
+            run_energy = (spec_e, solar_mat, grid_up)
+        else:
+            # with elasticity downstream the cap must land *before* the
+            # demand forecasters — host-applied, same floats as the
+            # fleet backend; billing (and the carbon forecast) switch
+            # to the delivered mix's effective intensity
+            comp = comp * cap_cols
+            carbon = (sres.c_eff, plan.assign.astype(np.int32))
+
+    elastic_summary = None
+    if elasticity is not None:
+        if plan is None:
+            raise ValueError("elasticity requires placement")
+        from repro.core.elasticity_jax import simulate_elastic_jax
         # separate compact-width scan (NOT folded into the sharded fleet
         # scan — the (N·K,) argsort would run once per device shard);
-        # its served demand is what the fleet below advances on
+        # its served demand is what the fleet below advances on. With
+        # energy on, `carbon` is the (c_eff, codes) indexed pair, so
+        # both the actual intensity and its forecast see the delivered
+        # mix — exactly like the fleet backend's ceff_reg forecast.
         eres = simulate_elastic_jax(comp, carbon, elasticity,
                                     cfg_base.interval_s,
                                     budget_series=_elastic_budget_series(
@@ -980,6 +1083,8 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                                  epsilon=cfg_base.epsilon,
                                  state_gb=cfg_base.state_gb,
                                  demand_scale=demand_scale,
-                                 n_rep=n_rep, traffic=run_traffic), 0)
+                                 n_rep=n_rep, traffic=run_traffic,
+                                 energy=run_energy), 0)
     return _aggregate_sweep_rows(policies, results, targets, n_tr, plan,
-                                 traffic_summary, elastic_summary)
+                                 traffic_summary, elastic_summary,
+                                 energy_summary)

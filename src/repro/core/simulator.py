@@ -187,13 +187,23 @@ def _record(series, cfg, t, rate, st, util, demand, served):
 # Population sweep (Figs 11-16): many jobs x many targets x policies
 # ---------------------------------------------------------------------------
 
-def sweep_population(policies: dict, family: SliceFamily, traces, carbon,
-                     targets: Sequence[float], cfg_base: SimConfig,
+def sweep_population(policies, family: SliceFamily = None, traces=None,
+                     carbon=None, targets: Sequence[float] = None,
+                     cfg_base: SimConfig = None,
                      demand_scale: float = 1.0,
                      backend: str = "scalar",
                      placement=None, traffic=None,
-                     elasticity=None) -> list:
-    """Returns rows: {policy, target, mean/std of carbon rate + throttle}.
+                     elasticity=None, energy=None):
+    """Run a population sweep: every (policy x target x trace) combination.
+
+    Preferred surface: pass a single `repro.core.spec.SweepSpec` as the
+    first argument — the per-layer configs (placement, traffic,
+    elasticity, energy) and the backend compose as fields — and get a
+    `repro.core.spec.SweepResult` back. The legacy kwargs surface below
+    is a thin shim kept for one release (deprecated; it returns the
+    bare row list):
+
+    Returns rows: {policy, target, mean/std of carbon rate + throttle}.
 
     `backend="fleet"` batches all (target x trace) pairs per policy through
     the vectorized `repro.core.fleet.FleetSimulator` — same rows, same
@@ -218,27 +228,41 @@ def sweep_population(policies: dict, family: SliceFamily, traces, carbon,
     over the (scaled, traffic-modulated) demand first — the fleet then
     sees each container's *served* demand, with unserved work deferred
     to later epochs; rows gain the `elastic_*` metrics.
+
+    `energy` (a `repro.energy.EnergyConfig`; requires `placement`) runs
+    the per-region virtual energy supply — solar, battery, grid events —
+    over the fleet's flexible load: demand is clamped by the virtual
+    power cap, emissions are billed at the delivered mix's effective
+    intensity, and rows gain the `energy_*` supply metrics.
     """
+    from repro.core.spec import SweepSpec
+    if isinstance(policies, SweepSpec):
+        if family is not None or traces is not None:
+            raise TypeError("pass either a SweepSpec or the kwargs "
+                            "surface, not both")
+        return policies.run()
     if backend == "fleet":
         from repro.core.fleet import sweep_population_fleet
         return sweep_population_fleet(policies, family, traces, carbon,
                                       targets, cfg_base,
                                       demand_scale=demand_scale,
                                       placement=placement, traffic=traffic,
-                                      elasticity=elasticity)
+                                      elasticity=elasticity, energy=energy)
     if backend == "jax":
         from repro.core.fleet_jax import sweep_population_jax
         return sweep_population_jax(policies, family, traces, carbon,
                                     targets, cfg_base,
                                     demand_scale=demand_scale,
                                     placement=placement, traffic=traffic,
-                                    elasticity=elasticity)
+                                    elasticity=elasticity, energy=energy)
     if placement is not None:
         raise ValueError("placement requires backend='fleet' or 'jax'")
     if traffic is not None:
         raise ValueError("traffic requires backend='fleet' or 'jax'")
     if elasticity is not None:
         raise ValueError("elasticity requires backend='fleet' or 'jax'")
+    if energy is not None:
+        raise ValueError("energy requires backend='fleet' or 'jax'")
     if backend != "scalar":
         raise ValueError(f"unknown sweep backend {backend!r}")
     rows = []

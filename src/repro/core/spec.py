@@ -1,0 +1,153 @@
+"""Declarative sweep surface: one `SweepSpec` for all four layers.
+
+The kwargs surface of `repro.core.simulator.sweep_population` grew one
+keyword per layer (placement, traffic, elasticity, energy) plus the
+backend selector and the placement engine's own constructor arguments.
+`SweepSpec` collapses that into a single declarative value — the
+per-layer configs compose as fields, the placement engine can be given
+either pre-built or as a `(PlacementConfig, regions)` pair resolved
+here, and `run()` dispatches to the selected backend. Every backend
+returns the same `SweepResult`, which wraps the aggregate rows with
+uniform accessors — `col`, `violations`, `parity` — so callers (and
+the benchmark gate) read gated metrics from one shape instead of
+per-layer special cases.
+
+The old kwargs path stays as a thin shim for one release:
+`sweep_population(policies, family, ...)` still works and still
+returns a plain list of row dicts (deprecated — new code should build
+a `SweepSpec` and call `run()`, or pass the spec straight to
+`sweep_population`, which then returns a `SweepResult`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.slices import SliceFamily
+from repro.core.simulator import SimConfig
+
+# row keys that are per-sweep metadata, not comparable metrics
+_NON_METRIC = {"policy", "target", "time_on_slice"}
+
+
+@dataclass
+class SweepSpec:
+    """Everything `sweep_population` needs, as one declarative value.
+
+    `placement` is either a ready `PlacementEngine`, or a
+    `PlacementConfig` to pair with `regions` (a list of per-region
+    carbon providers or a (T, R) intensity matrix) — the engine is then
+    built on `sim.interval_s`. The layer configs compose exactly as the
+    kwargs did: traffic and elasticity and energy all require
+    placement; `energy` additionally perturbs the grid the other
+    layers see (see `repro.energy`).
+    """
+    policies: dict
+    family: SliceFamily
+    traces: Sequence
+    targets: Sequence[float]
+    carbon: object = None               # provider (scalar) / matrix; may be
+    #                                     None when placement supplies it
+    sim: SimConfig = field(
+        default_factory=lambda: SimConfig(target_rate=0.0))
+    demand_scale: float = 1.0
+    backend: str = "fleet"
+    placement: object = None            # PlacementEngine | PlacementConfig
+    regions: object = None              # with a PlacementConfig placement
+    region_names: Optional[Sequence[str]] = None
+    traffic: object = None              # repro.traffic.TrafficConfig
+    elasticity: object = None           # repro.core.elasticity.ElasticityConfig
+    energy: object = None               # repro.energy.EnergyConfig
+
+    def resolve_placement(self):
+        """The placement engine (building one from a config), or None."""
+        if self.placement is None:
+            if self.regions is not None:
+                raise ValueError("SweepSpec.regions without a placement "
+                                 "config; set placement=PlacementConfig(...)")
+            return None
+        if hasattr(self.placement, "plan"):        # pre-built engine
+            if self.regions is not None:
+                raise ValueError("pass either a PlacementEngine or a "
+                                 "(PlacementConfig, regions) pair, not both")
+            return self.placement
+        if self.regions is None:
+            raise ValueError("placement=PlacementConfig(...) needs "
+                             "SweepSpec.regions (per-region carbon "
+                             "providers or a (T, R) intensity matrix)")
+        from repro.cluster.placement import PlacementEngine
+        return PlacementEngine(self.family, self.regions,
+                               interval_s=self.sim.interval_s,
+                               config=self.placement,
+                               region_names=self.region_names)
+
+    def run(self) -> "SweepResult":
+        """Execute the sweep on the selected backend."""
+        from repro.core.simulator import sweep_population
+        rows = sweep_population(self.policies, self.family, self.traces,
+                                self.carbon, self.targets, self.sim,
+                                demand_scale=self.demand_scale,
+                                backend=self.backend,
+                                placement=self.resolve_placement(),
+                                traffic=self.traffic,
+                                elasticity=self.elasticity,
+                                energy=self.energy)
+        return SweepResult(rows=rows, backend=self.backend, spec=self)
+
+
+@dataclass
+class SweepResult:
+    """Uniform result of a `SweepSpec` run: the per-(target, policy)
+    aggregate rows — carbon rate, throttle/served work, migrations,
+    plus whatever layer summaries were active (`traffic_*`,
+    `elastic_*`, `energy_*`) — behind one shape. Sequence protocol
+    gives back the rows, so row-level code ports by swapping the
+    constructor call only."""
+    rows: list
+    backend: str
+    spec: Optional[SweepSpec] = None
+
+    def __len__(self):
+        return len(self.rows)
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def __getitem__(self, i):
+        return self.rows[i]
+
+    def keys(self) -> list:
+        """Numeric metric keys present in every row (sorted)."""
+        common = set.intersection(*(set(r) for r in self.rows))
+        return sorted(k for k in common - _NON_METRIC
+                      if isinstance(self.rows[0][k], (int, float, bool)))
+
+    def col(self, key: str) -> np.ndarray:
+        """One metric across the rows, in row order."""
+        return np.asarray([float(r[key]) for r in self.rows])
+
+    @property
+    def violations(self) -> dict:
+        """Max over rows of every `*_violations` metric (zero-keyed
+        dict when no layer reported any) — the invariant surface the
+        scenario matrix and the bench gate read."""
+        return {k: float(self.col(k).max())
+                for k in self.keys() if k.endswith("_violations")}
+
+    def parity(self, other: "SweepResult", keys=None) -> float:
+        """Max relative difference vs another run of the same sweep
+        (rows matched by order; keys default to the shared numeric
+        metrics) — the cross-backend parity figure the gates pin."""
+        if len(other.rows) != len(self.rows):
+            raise ValueError(f"row count mismatch: {len(self.rows)} vs "
+                             f"{len(other.rows)}")
+        if keys is None:
+            keys = sorted(set(self.keys()) & set(other.keys()))
+        worst = 0.0
+        for a, b in zip(self.rows, other.rows):
+            for k in keys:
+                num = abs(float(a[k]) - float(b[k]))
+                worst = max(worst, num / max(abs(float(a[k])), 1.0))
+        return worst

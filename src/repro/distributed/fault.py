@@ -10,21 +10,27 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 
 @dataclass
 class HeartbeatMonitor:
-    """Tracks per-host heartbeats; flags hosts silent for > timeout_s."""
+    """Tracks per-host heartbeats; flags hosts silent for > timeout_s.
+
+    `clock` supplies the current time (defaults to `time.monotonic`) —
+    inject a virtual clock to drive detection deterministically in
+    scenarios and tests, without sleeps. Explicit `t`/`now` arguments
+    still override per call."""
 
     timeout_s: float = 30.0
     last_seen: dict = field(default_factory=dict)
+    clock: Callable[[], float] = time.monotonic
 
     def beat(self, host: str, t: Optional[float] = None):
-        self.last_seen[host] = t if t is not None else time.monotonic()
+        self.last_seen[host] = t if t is not None else self.clock()
 
     def dead_hosts(self, now: Optional[float] = None) -> list:
-        now = now if now is not None else time.monotonic()
+        now = now if now is not None else self.clock()
         return [h for h, t in self.last_seen.items() if now - t > self.timeout_s]
 
 

@@ -1,0 +1,21 @@
+"""Virtual energy supply layer (Ecovisor-style) + scenario stress matrix.
+
+`repro.energy.supply` models a per-region energy supply — solar
+generation, a battery, and the (event-perturbed) grid — and turns it
+into two signals the demand-side layers consume: a per-region *virtual
+power cap* fraction (software-defined cap on the flexible fleet load)
+and the *effective* carbon intensity of the delivered mix.
+`repro.energy.scenarios` runs named stress scenarios (fleet churn, grid
+outages, migration failures, stragglers, demand bursts) as
+`sweep_population` entries on both array backends with invariant checks.
+"""
+from repro.energy.supply import (BatteryConfig, EnergyConfig, EnergySpec,
+                                 GridEventConfig, SolarConfig, SupplyResult,
+                                 event_matrices, simulate_supply,
+                                 solar_series, supply_step_np)
+
+__all__ = [
+    "BatteryConfig", "EnergyConfig", "EnergySpec", "GridEventConfig",
+    "SolarConfig", "SupplyResult", "event_matrices", "simulate_supply",
+    "solar_series", "supply_step_np",
+]

@@ -1,0 +1,187 @@
+"""Fault tolerance + straggler mitigation: detection, recovery, delays.
+
+All timing is driven through the injectable clock / pinned seeds — no
+sleeps anywhere.
+"""
+import numpy as np
+import pytest
+
+from repro.distributed.fault import (FailureInjector, HeartbeatMonitor,
+                                     run_with_recovery)
+from repro.distributed.stragglers import StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor (clock injection)
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detects_silence_with_injected_clock():
+    now = [0.0]
+    mon = HeartbeatMonitor(timeout_s=30.0, clock=lambda: now[0])
+    mon.beat("a")
+    mon.beat("b")
+    now[0] = 25.0
+    mon.beat("b")
+    assert mon.dead_hosts() == []          # a is 25s silent: within timeout
+    now[0] = 31.0
+    assert mon.dead_hosts() == ["a"]       # past timeout
+    now[0] = 56.0
+    assert sorted(mon.dead_hosts()) == ["a", "b"]
+    mon.beat("a")
+    assert mon.dead_hosts() == ["b"]       # a recovered
+
+
+def test_heartbeat_explicit_times_override_clock():
+    mon = HeartbeatMonitor(timeout_s=10.0,
+                           clock=lambda: pytest.fail("clock consulted"))
+    mon.beat("h", t=100.0)
+    assert mon.dead_hosts(now=105.0) == []
+    assert mon.dead_hosts(now=111.0) == ["h"]
+
+
+def test_heartbeat_boundary_is_exclusive():
+    now = [0.0]
+    mon = HeartbeatMonitor(timeout_s=30.0, clock=lambda: now[0])
+    mon.beat("h")
+    now[0] = 30.0
+    assert mon.dead_hosts() == []          # silent for exactly timeout: alive
+    now[0] = 30.0 + 1e-9
+    assert mon.dead_hosts() == ["h"]
+
+
+def test_heartbeat_default_clock_is_monotonic():
+    mon = HeartbeatMonitor(timeout_s=1e6)
+    mon.beat("h")
+    assert mon.dead_hosts() == []
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector + checkpoint-restore recovery
+# ---------------------------------------------------------------------------
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector(schedule={5: 2})
+    assert inj.check(4) == 0
+    assert inj.check(5) == 2
+    assert inj.check(5) == 0               # one-shot: replay must not re-fire
+
+
+class _Job:
+    """Minimal checkpointed trainer for the recovery loop."""
+
+    def __init__(self):
+        self.step_idx = 0
+        self.ckpt_step = 0
+        self.devices = None
+        self.losses = []
+
+    def train_step(self, batch):
+        self.losses.append(batch)
+        self.step_idx += 1
+
+    def checkpoint(self):
+        self.ckpt_step = self.step_idx
+
+    def recover_after_failure(self, survivors):
+        self.devices = list(survivors)
+        # restore: roll back to the last checkpoint and replay from there
+        self.step_idx = self.ckpt_step
+        del self.losses[self.ckpt_step:]
+        return {"resumed_at": self.step_idx, "devices": len(survivors)}
+
+
+def test_run_with_recovery_restores_from_checkpoint():
+    job = _Job()
+    inj = FailureInjector(schedule={25: 3})
+    out = run_with_recovery(job, iter(range(10_000)), n_steps=40,
+                            devices=list(range(8)), injector=inj,
+                            checkpoint_every=10)
+    assert out["final_step"] == 40
+    assert len(out["recoveries"]) == 1
+    rec = out["recoveries"][0]
+    assert rec["at_step"] == 25
+    assert rec["resumed"]["resumed_at"] == 20     # last checkpoint
+    # 8 devices, 3 lost -> 5 survivors -> power-of-two shrink to 4
+    assert out["devices_left"] == 4
+    assert job.step_idx == 40
+    # replayed steps land exactly once in the restored history
+    assert len(job.losses) == 40
+
+
+def test_run_with_recovery_insufficient_survivors():
+    job = _Job()
+    inj = FailureInjector(schedule={3: 7})
+    with pytest.raises(RuntimeError, match="insufficient"):
+        run_with_recovery(job, iter(range(100)), n_steps=10,
+                          devices=list(range(8)), injector=inj,
+                          checkpoint_every=2, min_devices=2)
+
+
+def test_run_with_recovery_no_failures():
+    job = _Job()
+    out = run_with_recovery(job, iter(range(100)), n_steps=12,
+                            devices=list(range(4)), injector=None,
+                            checkpoint_every=5)
+    assert out == {"recoveries": [], "final_step": 12, "devices_left": 4}
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector (thresholds, patience, pinned-seed delays)
+# ---------------------------------------------------------------------------
+
+def test_straggler_detector_needs_warmup():
+    det = StragglerDetector(window=32)
+    for _ in range(7):
+        assert det.observe(100.0) is None  # < max(8, window // 4) samples
+
+
+def test_straggler_detector_threshold_and_patience():
+    det = StragglerDetector(window=32, threshold=1.8, patience=4)
+    for _ in range(10):
+        assert det.observe(1.0) is None
+    # 3 slow steps: flagged but below patience
+    for _ in range(3):
+        assert det.observe(2.0) is None
+    # a healthy step resets the flag counter
+    assert det.observe(1.0) is None
+    acts = [det.observe(2.0) for _ in range(4)]
+    assert acts[:3] == [None, None, None] and acts[3] == "migrate"
+    # the action resets: the next slow step starts a fresh patience run
+    assert det.observe(2.0) is None
+
+
+def test_straggler_slowdown_ratio():
+    det = StragglerDetector()
+    for _ in range(9):
+        det.observe(1.0)
+    det.observe(2.5)
+    assert det.slowdown() == pytest.approx(2.5)
+
+
+def test_straggler_detection_delay_distribution_pinned_seed():
+    """With noisy healthy steps (pinned seed), a 2.6x straggler is always
+    caught, always after exactly `patience` slow steps (the threshold has
+    margin over the noise), never before onset."""
+    rng = np.random.default_rng(42)
+    delays = []
+    for _ in range(50):
+        det = StragglerDetector(window=32, threshold=1.8, patience=4)
+        base = np.clip(rng.normal(1.0, 0.05, size=200), 0.8, 1.2)
+        onset = 60
+        fired = None
+        for t in range(200):
+            s = base[t] * (2.6 if t >= onset else 1.0)
+            if det.observe(s) == "migrate":
+                fired = t
+                break
+        assert fired is not None and fired >= onset
+        delays.append(fired - onset)
+    # patience=4 consecutive flags -> detection on the 4th slow step
+    assert set(delays) == {3}
+
+
+def test_straggler_no_false_positives_on_noise():
+    rng = np.random.default_rng(7)
+    det = StragglerDetector(window=32, threshold=1.8, patience=4)
+    for s in np.clip(rng.normal(1.0, 0.08, size=500), 0.7, 1.4):
+        assert det.observe(float(s)) is None

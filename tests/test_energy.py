@@ -1,0 +1,258 @@
+"""Virtual energy supply layer: parity chain, invariants, sweep fold.
+
+The supply model's parity chain mirrors the simulator's: the pure-float
+scalar step anchors the NumPy step bit-for-bit, the JAX step tracks the
+NumPy ledger <= 1e-9, and the full sweep with the energy layer enabled
+holds the fleet <-> jax backend budget of 1e-6 (exact when the host
+path applies the cap, i.e. with elasticity on).
+"""
+import numpy as np
+import pytest
+
+from repro.cluster.placement import PlacementConfig, PlacementEngine
+from repro.cluster.slices import paper_family
+from repro.core.policy import CarbonAgnosticPolicy, CarbonContainerPolicy
+from repro.core.simulator import SimConfig, sweep_population
+from repro.energy import (BatteryConfig, EnergyConfig, EnergySpec,
+                          GridEventConfig, SolarConfig, event_matrices,
+                          simulate_supply, solar_series)
+from repro.energy.supply import (flex_w_per_unit, supply_step_np,
+                                 supply_step_scalar)
+
+SEED = 0
+
+
+def _spec(n=50, R=3, dt=300.0):
+    return EnergySpec.from_config(EnergyConfig(), n, R, dt,
+                                  flex_w_per_unit(paper_family()))
+
+
+def _streams(T=200, R=3, seed=SEED):
+    rng = np.random.default_rng(seed)
+    load = rng.uniform(0.0, 4000.0, size=(T, R))
+    solar = rng.uniform(0.0, 3000.0, size=(T, R))
+    grid_c = rng.uniform(20.0, 600.0, size=(T, R))
+    up = (rng.uniform(size=(T, R)) > 0.1).astype(float)
+    return load, solar, grid_c, up
+
+
+def test_scalar_step_matches_numpy_bitwise():
+    spec = _spec()
+    load, solar, grid_c, up = _streams()
+    soc = np.full(load.shape[1], spec.soc0_wh)
+    for t in range(load.shape[0]):
+        soc_np, outs_np = supply_step_np(spec, soc, load[t], solar[t],
+                                         grid_c[t], up[t])
+        for r in range(load.shape[1]):
+            soc_s, outs_s = supply_step_scalar(
+                spec, float(soc[r]), float(load[t, r]), float(solar[t, r]),
+                float(grid_c[t, r]), float(up[t, r]))
+            assert soc_s == soc_np[r]
+            for a, b in zip(outs_s, (o[r] for o in outs_np)):
+                assert a == b
+        soc = soc_np
+
+
+def test_supply_invariants_random_streams():
+    spec = _spec()
+    sres = simulate_supply(*_streams(), spec)
+    assert sres.conservation_max_err_w <= 1e-6
+    assert sres.cap_violations == 0
+    assert sres.soc_violations == 0
+    # physical ranges
+    assert np.all(sres.cap_frac >= 0.0) and np.all(sres.cap_frac <= 1.0)
+    assert np.all(sres.grid >= 0.0)
+    # outage epochs draw nothing from the grid
+    assert np.all(sres.grid[sres.grid_up == 0.0] == 0.0)
+    # effective intensity never exceeds the grid's (solar/battery are
+    # zero-carbon)
+    assert np.all(sres.c_eff <= _streams()[2] + 1e-12)
+
+
+def test_supply_summary_energy_conservation():
+    spec = _spec()
+    sres = simulate_supply(*_streams(), spec)
+    s = sres.summary()
+    assert s["energy_supplied_wh"] == pytest.approx(
+        s["energy_solar_wh"] + s["energy_battery_wh"] + s["energy_grid_wh"],
+        rel=1e-12)
+    assert 0.0 <= s["energy_unmet_frac"] <= 1.0
+
+
+def test_battery_charges_from_surplus_and_discharges_into_deficit():
+    spec = EnergySpec.from_config(
+        EnergyConfig(battery=BatteryConfig(capacity_wh_per_container=100.0,
+                                           soc0_frac=0.0)),
+        10, 1, 300.0, 100.0)
+    T = 20
+    load = np.concatenate([np.zeros(10), np.full(10, 500.0)])[:, None]
+    solar = np.concatenate([np.full(10, 800.0), np.zeros(10)])[:, None]
+    grid_c = np.full((T, 1), 300.0)
+    up = np.zeros((T, 1))                      # islanded: battery or nothing
+    sres = simulate_supply(load, solar, grid_c, up, spec)
+    assert sres.soc[9, 0] > sres.soc[0, 0]     # charged from surplus
+    assert sres.discharge[10:, 0].max() > 0.0  # then discharged
+    assert np.all(sres.grid == 0.0)
+    # zero-carbon wherever anything was actually supplied (islanded)
+    assert np.all(sres.c_eff[sres.supplied > 0.0] == 0.0)
+
+
+def test_event_matrices_deterministic_and_correlated():
+    cfg = GridEventConfig(n_random_outages=3, n_random_shocks=2, seed=9)
+    a_mult, a_up = event_matrices(cfg, 200, 3)
+    b_mult, b_up = event_matrices(cfg, 200, 3)
+    assert np.array_equal(a_mult, b_mult) and np.array_equal(a_up, b_up)
+    assert a_up.min() == 0.0                   # outages actually landed
+    # region -1 hits every region the same epoch (correlated spike)
+    m, up = event_matrices(GridEventConfig(outages=((-1, 10, 5),),
+                                           shocks=((-1, 30, 4, 2.0),)),
+                           100, 3)
+    assert np.all(up[10:15] == 0.0) and np.all(up[:10] == 1.0)
+    assert np.all(m[30:34] == 2.0) and np.all(m[:30] == 1.0)
+
+
+def test_solar_series_shape_and_night():
+    cfg = SolarConfig(seed=3)
+    s = solar_series(cfg, 288, 3, 300.0, 1000.0)
+    assert s.shape == (288, 3)
+    assert np.all(s >= 0.0) and s.max() <= 1000.0
+    assert s.max() > 0.0
+    # deterministic per seed
+    assert np.array_equal(s, solar_series(cfg, 288, 3, 300.0, 1000.0))
+    # every region has night epochs (regions are tz-spread by default,
+    # so they are dark at *different* epochs)
+    assert np.all(np.any(s == 0.0, axis=0))
+
+
+def test_supply_jax_matches_numpy():
+    pytest.importorskip("jax")
+    from repro.energy.supply_jax import simulate_supply_jax
+    spec = _spec()
+    load, solar, grid_c, up = _streams()
+    a = simulate_supply(load, solar, grid_c, up, spec)
+    b = simulate_supply_jax(load, solar, grid_c, up, spec)
+    for name in ("solar_used", "charge", "discharge", "grid", "supplied",
+                 "cap_frac", "c_eff", "soc"):
+        x, y = getattr(a, name), getattr(b, name)
+        assert np.max(np.abs(x - y)) <= 1e-9, name
+    assert b.conservation_max_err_w <= 1e-6
+    assert b.cap_violations == 0 and b.soc_violations == 0
+
+
+# ---------------------------------------------------------------------------
+# The sweep fold
+# ---------------------------------------------------------------------------
+
+def _sweep_inputs(T=96, n_tr=30, seed=1):
+    rng = np.random.default_rng(seed)
+    traces = rng.uniform(0.2, 1.6, size=(T, n_tr))
+    t = np.linspace(0, 4 * np.pi, T)
+    regions = np.stack([200 + 150 * np.sin(t + p)
+                        for p in (0.0, 1.5, 3.0)], axis=1) + 50.0
+    return traces, regions
+
+
+def _engine(regions):
+    return PlacementEngine(paper_family(), regions, interval_s=300.0,
+                           config=PlacementConfig(capacity=25))
+
+
+_POL = {"cc": lambda: CarbonContainerPolicy(),
+        "agnostic": lambda: CarbonAgnosticPolicy()}
+_EN = EnergyConfig(events=GridEventConfig(outages=((1, 20, 6),),
+                                          shocks=((-1, 50, 12, 2.0),)))
+
+
+def test_energy_requires_placement():
+    traces, _ = _sweep_inputs()
+    with pytest.raises(ValueError, match="placement"):
+        sweep_population(_POL, paper_family(), traces, None, [40.0],
+                         SimConfig(target_rate=0.0), backend="fleet",
+                         energy=_EN)
+    with pytest.raises(ValueError, match="backend"):
+        sweep_population(_POL, paper_family(),
+                         [traces[:, 0]], None, [40.0],
+                         SimConfig(target_rate=0.0), energy=_EN)
+
+
+def test_sweep_energy_rows_and_invariants_fleet():
+    traces, regions = _sweep_inputs()
+    rows = sweep_population(_POL, paper_family(), traces, None,
+                            [40.0, 80.0], SimConfig(target_rate=0.0),
+                            backend="fleet", placement=_engine(regions),
+                            energy=_EN)
+    assert len(rows) == 4
+    r0 = rows[0]
+    assert r0["energy_cap_violations"] == 0
+    assert r0["energy_soc_violations"] == 0
+    assert r0["energy_conservation_max_err_w"] <= 1e-6
+    assert r0["energy_outage_epochs"] == 6
+    assert 0.0 < r0["energy_solar_frac"] < 1.0
+    # the supply sim is shared across rows (one compact fleet)
+    assert all(r["energy_grid_wh"] == r0["energy_grid_wh"] for r in rows)
+    # shocked + capped sweep differs from the unperturbed one
+    plain = sweep_population(_POL, paper_family(), traces, None,
+                             [40.0, 80.0], SimConfig(target_rate=0.0),
+                             backend="fleet", placement=_engine(regions))
+    assert rows[0]["carbon_rate_mean"] != plain[0]["carbon_rate_mean"]
+
+
+def _row_parity(rows_a, rows_b):
+    keys = [k for k in rows_a[0]
+            if isinstance(rows_a[0][k], (int, float))]
+    return max(abs(a[k] - b[k]) / max(abs(a[k]), 1.0)
+               for a, b in zip(rows_a, rows_b) for k in keys)
+
+
+def test_sweep_energy_fleet_jax_parity():
+    pytest.importorskip("jax")
+    traces, regions = _sweep_inputs()
+    kw = dict(cfg_base=SimConfig(target_rate=0.0), energy=_EN)
+    rows_f = sweep_population(_POL, paper_family(), traces, None,
+                              [40.0, 80.0], backend="fleet",
+                              placement=_engine(regions), **kw)
+    rows_j = sweep_population(_POL, paper_family(), traces, None,
+                              [40.0, 80.0], backend="jax",
+                              placement=_engine(regions), **kw)
+    assert _row_parity(rows_f, rows_j) <= 1e-6
+
+
+def test_sweep_all_four_layers_fleet_jax_parity():
+    pytest.importorskip("jax")
+    from repro.core.elasticity import ElasticityConfig
+    from repro.traffic import TrafficConfig, UserPopulation
+    traces, regions = _sweep_inputs(n_tr=24)
+    tr = TrafficConfig(population=UserPopulation(n_users=5000, n_regions=3,
+                                                 seed=3))
+    el = ElasticityConfig(k_levels=4, unit_capacity=0.3,
+                          budget_g_per_epoch=60.0, forecast="forecast",
+                          shape_budget=True)
+    kw = dict(cfg_base=SimConfig(target_rate=0.0), traffic=tr,
+              elasticity=el, energy=_EN)
+    rows_f = sweep_population(_POL, paper_family(), traces, None, [40.0],
+                              backend="fleet", placement=_engine(regions),
+                              **kw)
+    rows_j = sweep_population(_POL, paper_family(), traces, None, [40.0],
+                              backend="jax", placement=_engine(regions),
+                              **kw)
+    # host-applied cap + indexed c_eff: identical floats, not just 1e-6
+    assert _row_parity(rows_f, rows_j) <= 1e-6
+    assert rows_f[0]["energy_cap_violations"] == 0
+    assert rows_f[0]["elastic_cap_violations"] == rows_j[0][
+        "elastic_cap_violations"]
+
+
+def test_energy_with_traffic_in_scan_parity():
+    pytest.importorskip("jax")
+    from repro.traffic import TrafficConfig, UserPopulation
+    traces, regions = _sweep_inputs(n_tr=24)
+    tr = TrafficConfig(population=UserPopulation(n_users=5000, n_regions=3,
+                                                 seed=3))
+    kw = dict(cfg_base=SimConfig(target_rate=0.0), traffic=tr, energy=_EN)
+    rows_f = sweep_population(_POL, paper_family(), traces, None, [40.0],
+                              backend="fleet", placement=_engine(regions),
+                              **kw)
+    rows_j = sweep_population(_POL, paper_family(), traces, None, [40.0],
+                              backend="jax", placement=_engine(regions),
+                              **kw)
+    assert _row_parity(rows_f, rows_j) <= 1e-6

@@ -1,0 +1,89 @@
+"""Scenario stress matrix as a parameterized fast-lane table.
+
+Each cell of `repro.energy.scenarios.build_matrix` runs at small shapes
+on both array backends and must hold the matrix invariants: energy
+conservation, zero virtual-cap violations, battery SoC in bounds, and
+fleet <-> jax row parity. `make scenarios` runs the same matrix at full
+shape.
+"""
+import numpy as np
+import pytest
+
+from repro.energy import scenarios as sc
+
+_T, _N = 64, 8
+_NAMES = [s.name for s in sc.build_matrix(_T)]
+
+
+def _cell(name):
+    return next(s for s in sc.build_matrix(_T) if s.name == name)
+
+
+@pytest.mark.parametrize("name", _NAMES)
+def test_scenario_invariants_fleet(name):
+    out = sc.run_scenario(_cell(name), T=_T, n_tr=_N, targets=(40.0,),
+                          backends=("fleet",))
+    assert out["ok"], out["checks"]
+    c = out["checks"]
+    assert c["conservation_max_err_w"] <= sc.CONSERVATION_TOL_W
+    assert c["cap_violations"] == 0
+    assert c["soc_violations"] == 0
+
+
+@pytest.mark.parametrize("name", _NAMES)
+def test_scenario_backend_parity(name):
+    pytest.importorskip("jax")
+    out = sc.run_scenario(_cell(name), T=_T, n_tr=_N, targets=(40.0,),
+                          backends=("fleet", "jax"))
+    assert out["ok"], out["checks"]
+    assert out["checks"]["backend_parity"] <= sc.PARITY_TOL
+
+
+def test_matrix_covers_required_stressors():
+    assert {"fleet_churn", "grid_outage", "intensity_shock",
+            "migration_failures", "stragglers",
+            "demand_burst"} <= set(_NAMES)
+
+
+def test_grid_outage_scenario_actually_islands():
+    out = sc.run_scenario(_cell("grid_outage"), T=_T, n_tr=_N,
+                          targets=(40.0,), backends=("fleet",))
+    assert out["outage_epochs"] > 0
+
+
+def test_failure_scenario_detects_with_injected_clock():
+    out = sc.run_scenario(_cell("migration_failures"), T=_T, n_tr=_N,
+                          targets=(40.0,), backends=("fleet",))
+    meta = out["meta"]
+    assert meta["failed_at"] and meta["detected_at"]
+    # heartbeat timeout of 2.5 intervals -> declared dead on the 3rd
+    # silent epoch (2 epochs after the failure epoch), deterministically
+    assert set(meta["detect_delay_epochs"].values()) == {2}
+    # every scheduled failure surfaces as its own detected episode
+    assert len(meta["episodes"]) == 3
+
+
+def test_straggler_scenario_migrates():
+    out = sc.run_scenario(_cell("stragglers"), T=_T, n_tr=_N,
+                          targets=(40.0,), backends=("fleet",))
+    meta = out["meta"]
+    assert meta["migrated_at"] is not None
+    assert meta["straggle_epochs"] >= 4    # detector patience lower bound
+
+
+def test_burst_scenario_tracks_within_tolerance():
+    out = sc.run_scenario(_cell("demand_burst"), T=_T, n_tr=_N,
+                          targets=(40.0,), backends=("fleet",))
+    assert out["meta"]["within_tolerance"]
+    assert out["meta"]["ma_max_err"] <= 0.05
+
+
+def test_masks_are_deterministic():
+    a = sc.churn_mask(_T, _N)
+    assert np.array_equal(a, sc.churn_mask(_T, _N))
+    m1, meta1 = sc.failure_mask(_T, _N, 300.0)
+    m2, meta2 = sc.failure_mask(_T, _N, 300.0)
+    assert np.array_equal(m1, m2) and meta1 == meta2
+    s1, _ = sc.straggler_mask(_T, _N)
+    s2, _ = sc.straggler_mask(_T, _N)
+    assert np.array_equal(s1, s2)

@@ -1,0 +1,134 @@
+"""SweepSpec / SweepResult: the declarative sweep surface and its shim.
+
+The spec path must produce byte-identical rows to the legacy kwargs
+path on every backend and layer combination — it is a surface change,
+not a semantic one.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster.placement import PlacementConfig, PlacementEngine
+from repro.cluster.slices import paper_family
+from repro.core.policy import CarbonAgnosticPolicy, CarbonContainerPolicy
+from repro.core.simulator import SimConfig, sweep_population
+from repro.core.spec import SweepResult, SweepSpec
+from repro.energy import EnergyConfig, GridEventConfig
+
+_POL = {"cc": lambda: CarbonContainerPolicy(),
+        "agnostic": lambda: CarbonAgnosticPolicy()}
+
+
+def _inputs(T=64, n_tr=12, seed=2):
+    rng = np.random.default_rng(seed)
+    traces = rng.uniform(0.2, 1.5, size=(T, n_tr))
+    t = np.linspace(0, 4 * np.pi, T)
+    regions = np.stack([220 + 140 * np.sin(t + p)
+                        for p in (0.0, 2.0, 4.0)], axis=1) + 40.0
+    return traces, regions
+
+
+def test_spec_matches_kwargs_rows_exactly():
+    traces, regions = _inputs()
+    fam = paper_family()
+    cfg = SimConfig(target_rate=0.0)
+    pc = PlacementConfig(capacity=10)
+    en = EnergyConfig(events=GridEventConfig(shocks=((-1, 20, 8, 2.0),)))
+    res = SweepSpec(policies=_POL, family=fam, traces=traces,
+                    targets=[40.0, 80.0], sim=cfg, backend="fleet",
+                    placement=pc, regions=regions, energy=en).run()
+    rows = sweep_population(_POL, fam, traces, None, [40.0, 80.0], cfg,
+                            backend="fleet",
+                            placement=PlacementEngine(
+                                fam, regions, interval_s=cfg.interval_s,
+                                config=pc),
+                            energy=en)
+    assert isinstance(res, SweepResult)
+    assert isinstance(rows, list)           # the shim returns bare rows
+    assert res.rows == rows
+
+
+def test_sweep_population_accepts_spec_directly():
+    traces, regions = _inputs()
+    spec = SweepSpec(policies=_POL, family=paper_family(), traces=traces,
+                     targets=[40.0], backend="fleet",
+                     placement=PlacementConfig(capacity=10),
+                     regions=regions)
+    res = sweep_population(spec)
+    assert isinstance(res, SweepResult)
+    assert len(res) == 2 and res.backend == "fleet"
+    with pytest.raises(TypeError, match="not both"):
+        sweep_population(spec, paper_family())
+
+
+def test_spec_scalar_backend_and_carbon_provider():
+    from repro.carbon.intensity import TraceProvider
+    rng = np.random.default_rng(0)
+    traces = [rng.uniform(0.2, 1.5, size=48) for _ in range(3)]
+    carbon = TraceProvider(200 + 100 * rng.uniform(size=48))
+    res = SweepSpec(policies=_POL, family=paper_family(), traces=traces,
+                    targets=[50.0], carbon=carbon, backend="scalar").run()
+    rows = sweep_population(_POL, paper_family(), traces, carbon, [50.0],
+                            SimConfig(target_rate=0.0), backend="scalar")
+    assert res.rows == rows
+
+
+def test_spec_placement_resolution_errors():
+    traces, regions = _inputs()
+    base = dict(policies=_POL, family=paper_family(), traces=traces,
+                targets=[40.0])
+    with pytest.raises(ValueError, match="regions"):
+        SweepSpec(**base, placement=PlacementConfig(capacity=10)).run()
+    with pytest.raises(ValueError, match="placement config"):
+        SweepSpec(**base, regions=regions).run()
+    eng = PlacementEngine(paper_family(), regions,
+                          config=PlacementConfig(capacity=10))
+    with pytest.raises(ValueError, match="not both"):
+        SweepSpec(**base, placement=eng, regions=regions).run()
+    # a pre-built engine passes through untouched
+    assert SweepSpec(**base, placement=eng).resolve_placement() is eng
+
+
+def test_spec_engine_built_on_sim_interval():
+    traces, regions = _inputs()
+    spec = SweepSpec(policies=_POL, family=paper_family(), traces=traces,
+                     targets=[40.0],
+                     sim=SimConfig(target_rate=0.0, interval_s=600.0),
+                     placement=PlacementConfig(capacity=10),
+                     regions=regions)
+    assert spec.resolve_placement().interval_s == 600.0
+
+
+def test_sweep_result_accessors():
+    traces, regions = _inputs()
+    res = SweepSpec(policies=_POL, family=paper_family(), traces=traces,
+                    targets=[40.0, 80.0], backend="fleet",
+                    placement=PlacementConfig(capacity=10), regions=regions,
+                    energy=EnergyConfig()).run()
+    # sequence protocol
+    assert len(res) == 4
+    assert [r["policy"] for r in res] == [r["policy"] for r in res.rows]
+    assert res[0] is res.rows[0]
+    # uniform metric access
+    assert res.col("carbon_rate_mean").shape == (4,)
+    assert "carbon_rate_mean" in res.keys()
+    assert "policy" not in res.keys()
+    v = res.violations
+    assert v["energy_cap_violations"] == 0.0
+    assert v["energy_soc_violations"] == 0.0
+    # self-parity is exactly zero; a perturbed copy is not
+    assert res.parity(res) == 0.0
+    import copy
+    other = copy.deepcopy(res)
+    other.rows[0]["carbon_rate_mean"] *= 1.01
+    assert res.parity(other) > 1e-3
+
+
+def test_sweep_result_parity_row_mismatch():
+    traces, regions = _inputs()
+    res = SweepSpec(policies=_POL, family=paper_family(), traces=traces,
+                    targets=[40.0], backend="fleet",
+                    placement=PlacementConfig(capacity=10),
+                    regions=regions).run()
+    short = SweepResult(rows=res.rows[:1], backend="fleet")
+    with pytest.raises(ValueError, match="row count"):
+        res.parity(short)
