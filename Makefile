@@ -23,7 +23,7 @@ bench-fleet:
 # warmup_s, never gated).
 bench-gate:
 	$(PY) -m benchmarks.run \
-		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax,placement_sweep_pallas,traffic_sweep,elasticity_sweep,energy_sweep \
+		--only fleet_sweep,placement_sweep,fleet_sweep_jax,placement_sweep_jax,placement_sweep_pallas,traffic_sweep,elasticity_sweep,energy_sweep,robustness_sweep \
 		--fast true --json benchmarks/out/ci.json
 	$(PY) -m benchmarks.check_regression benchmarks/out/ci.json \
 		--min fleet_sweep.speedup_x=10 \
@@ -64,7 +64,13 @@ bench-gate:
 		--max energy_sweep.energy_conservation_max_err_w=1e-6 \
 		--max energy_sweep.energy_cap_violations=0 \
 		--max energy_sweep.energy_soc_violations=0 \
-		--max energy_sweep.sweep_parity_max_rel_diff=1e-6
+		--max energy_sweep.sweep_parity_max_rel_diff=1e-6 \
+		--max robustness_sweep.ladder_excess_overshoot=1.5 \
+		--min robustness_sweep.hold_excess_overshoot=3.0 \
+		--max robustness_sweep.conservative_overshoot=0 \
+		--max robustness_sweep.conservative_budget_violations=0 \
+		--min robustness_sweep.fault_stale_frac=0.2 \
+		--max robustness_sweep.sweep_parity_max_rel_diff=1e-6
 
 # Multi-region placement demo: heterogeneous fleet migrating between
 # low- and high-variability grids vs the frozen no-migration baseline
@@ -83,7 +89,10 @@ traffic:
 # indexed-carbon path must never materialize a (T, N) matrix — a
 # single tiled f64 matrix is ~2.3 GB, so the 4 GB ceiling catches the
 # first one; measured honest peak is ~2.3 GB), and zero capacity
-# violations. Fresh process per run so peak_rss_mb measures this entry.
+# violations. A non-trivial signal-plane fault plan (carbon dropouts +
+# blackout, power gaps, seeded migration failures) is enabled, so the
+# floors certify the degraded path too. Fresh process per run so
+# peak_rss_mb measures this entry.
 jax-sweep:
 	$(PY) -m benchmarks.run --only jax_sweep_scale \
 		--json benchmarks/out/jax_sweep.json
@@ -95,7 +104,10 @@ jax-sweep:
 		--max jax_sweep_scale.elastic_cap_violations=0 \
 		--max jax_sweep_scale.energy_conservation_max_err_w=1e-6 \
 		--max jax_sweep_scale.energy_cap_violations=0 \
-		--max jax_sweep_scale.energy_soc_violations=0
+		--max jax_sweep_scale.energy_soc_violations=0 \
+		--min jax_sweep_scale.fault_stale_frac=0.1 \
+		--min jax_sweep_scale.fault_failed_migrations_mean=0.001 \
+		--min jax_sweep_scale.fault_unmetered_g_mean=0.1
 
 # Per-container elasticity demo: K-level CarbonScaler marginal
 # allocation under a shaped fleet carbon budget, with the

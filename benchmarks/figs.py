@@ -656,8 +656,13 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     (c_eff, codes) layout so no (T, N) carbon matrix appears), and the
     per-container elasticity layer runs its own compact-width scan (the
     (N·K,) marginal-allocation argsort per epoch, under a shaped fleet
-    carbon budget) whose served demand feeds the fleet scan. The 4 GB
-    RSS ceiling holds with all three layers enabled, and the energy
+    carbon budget) whose served demand feeds the fleet scan. A
+    signal-plane fault plan is enabled throughout: carbon-feed dropouts
+    plus a fleet-wide blackout window degraded through the
+    hold/prior/floor ladder, power-meter gaps (unmetered emissions
+    surfaced per row), and seeded migration failures with capped
+    exponential backoff in the planner. The 4 GB RSS ceiling holds with
+    all three layers AND the fault plan enabled, and the energy
     invariants (conservation, zero cap/SoC violations) gate alongside
     the throughput floor.
 
@@ -679,6 +684,9 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     from repro.core.policy import CarbonContainerPolicy
     from repro.core.simulator import SimConfig, sweep_population
     from repro.energy import EnergyConfig, GridEventConfig
+    from repro.robustness import (CarbonFeedFaults, DegradeConfig,
+                                  FaultPlan, MigrationFaults,
+                                  PowerTelemetryFaults)
     from repro.traffic import TrafficConfig, UserPopulation
     from repro.traffic.autoscale import ReplicaConfig
     from repro.workload.azure_like import sample_population_matrix
@@ -710,12 +718,22 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     energy = EnergyConfig(events=GridEventConfig(
         outages=((1, T_ep // 3, T_ep // 24),),
         shocks=((-1, T_ep // 2, T_ep // 12, 1.6),)))
+    # non-trivial fault plan: the throughput floor and RSS ceiling must
+    # hold with the signal plane degraded (the observed (T, R) feed and
+    # the (T,) gap vector are the only extra arrays — nothing (T, N))
+    flt = FaultPlan(
+        carbon=CarbonFeedFaults(dropout_prob=0.2,
+                                blackouts=((-1, T_ep // 3, T_ep // 12),)),
+        power=PowerTelemetryFaults(gap_prob=0.05),
+        migration=MigrationFaults(fail_prob=0.2, backoff_cap=8),
+        degrade=DegradeConfig(mode="ladder", ttl_epochs=3),
+        seed=11)
 
     def _sweep():
         return sweep_population(policies, fam, demand, None, targets, cfg,
                                 backend="jax", placement=eng,
                                 traffic=traffic, elasticity=elastic,
-                                energy=energy)
+                                energy=energy, faults=flt)
 
     t0 = time.perf_counter()
     rows_w = _sweep()
@@ -724,7 +742,20 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
     rows_jax = _sweep()
     steady_s = time.perf_counter() - t0
 
-    plan = plan_jax(eng, demand, state_gb=cfg.state_gb)
+    # invariant-check plan, recomputed the way the sweep built it:
+    # grid shocks applied to the TRUE feed first (physical), then the
+    # degrade ladder on top — the planner only ever saw the observed
+    # signal, and threads the same seeded migration-failure mask
+    import copy as _copy
+
+    from repro.energy.supply import event_matrices
+    from repro.robustness.degrade import observe_intensity
+    shock_mult, _ = event_matrices(energy.events, T_ep, eng.n_regions)
+    true_reg = eng._region_matrix(T_ep) * shock_mult
+    eng_chk = _copy.copy(eng)
+    eng_chk.regions = observe_intensity(true_reg, flt,
+                                        eng.interval_s).observed
+    plan = plan_jax(eng_chk, demand, state_gb=cfg.state_gb, faults=flt)
     occ = plan.occupancy()
     n_containers = n_traces * n_targets
     T = demand.shape[0]
@@ -760,6 +791,12 @@ def jax_sweep_scale(n_traces: int = 100_000, n_targets: int = 10,
         "energy_outage_epochs": int(rows_jax[0]["energy_outage_epochs"]),
         "energy_solar_frac": rows_jax[0]["energy_solar_frac"],
         "energy_unmet_frac": rows_jax[0]["energy_unmet_frac"],
+        "fault_stale_frac": rows_jax[0]["fault_stale_frac"],
+        "fault_prior_frac": rows_jax[0]["fault_prior_frac"],
+        "fault_floor_frac": rows_jax[0]["fault_floor_frac"],
+        "fault_failed_migrations_mean":
+            rows_jax[0]["fault_failed_migrations_mean"],
+        "fault_unmetered_g_mean": rows_jax[0]["fault_unmetered_g_mean"],
     }
     return rows, derived
 
@@ -1141,3 +1178,150 @@ def energy_sweep(n_containers: int = 400, days: int = 4):
             r0["carbon_rate_mean"] - res_off[0]["carbon_rate_mean"],
     }
     return list(res_on), derived
+
+
+def robustness_sweep(n_traces: int = 96, n_targets: int = 3, days: int = 1):
+    """The signal-plane fault-injection benchmark-gate entry.
+
+    One placed fleet sweep run under a 20%-dropout carbon feed (plus a
+    trough-anchored blackout, seeded migration failures, and power-
+    telemetry gaps), once per degradation mode, on both array backends.
+    Gated claims:
+
+      - `ladder_excess_overshoot`: with the graceful-degradation ladder
+        (hold -> causal diurnal prior -> conservative floor) the worst
+        per-row overshoot of the carbon target stays within a pinned
+        bound of the oracle (fault-free) sweep.
+      - `hold_excess_overshoot`: naive hold-forever demonstrably blows
+        through the target on the same fault plan (the floor pins the
+        failure mode the ladder exists to prevent — the blackout lands
+        at the intensity trough, so held samples flatter the budget
+        precisely while the true grid gets dirtier).
+      - `conservative_budget_violations` == 0: under mode
+        "conservative" (noise-free faults, traces bounded by c_max) the
+        recorded power series never exceeds the true-billed gram
+        target, counted per (epoch, container) by
+        `repro.robustness.budget_violations`.
+      - `sweep_parity_max_rel_diff` <= 1e-6: fleet vs jax agree on
+        every shared row metric with the full fault plan enabled
+        (degraded feed, failed migrations, unmetered emissions).
+    """
+    from repro.cluster.placement import PlacementConfig
+    from repro.cluster.slices import paper_family
+    from repro.core.fleet import FleetSimulator
+    from repro.core.policy import CarbonContainerPolicy
+    from repro.core.simulator import SimConfig
+    from repro.core.spec import SweepSpec
+    from repro.robustness import (CarbonFeedFaults, DegradeConfig,
+                                  FaultPlan, MigrationFaults,
+                                  PowerTelemetryFaults, budget_violations,
+                                  observe_intensity)
+    from repro.workload.azure_like import sample_population_matrix
+
+    fam = paper_family()
+    T = 288 * days
+    t = np.arange(T)
+    # diurnal grids with a deep trough: the blackout opens at the trough
+    # so hold-forever budgets on the day's cleanest reading while the
+    # true intensity climbs toward the peak
+    phases = (0.0, 1.9, 3.6)
+    regions = np.stack([260.0 + 210.0 * np.sin(
+        2 * np.pi * t / 288.0 + 2.6 + p) for p in phases], axis=1)
+    # mid-day trough: fresh samples exist before the feed goes dark, so
+    # hold-forever genuinely holds a flattering reading
+    trough = int(np.argmin(regions[:, 0]))
+    demand = sample_population_matrix(n_traces, days=days, seed=2)
+    # low targets so the gram budget genuinely binds (the workload
+    # draws ~7-10 g/hr unconstrained) - overshoot is then a real signal
+    targets = list(np.linspace(3.0, 9.0, n_targets))
+    policies = {"cc": lambda: CarbonContainerPolicy()}
+    cfg = SimConfig(target_rate=0.0)
+
+    def _plan(mode):
+        return FaultPlan(
+            carbon=CarbonFeedFaults(dropout_prob=0.2,
+                                    blackouts=((-1, trough, T // 3),)),
+            power=PowerTelemetryFaults(gap_prob=0.05),
+            migration=MigrationFaults(fail_prob=0.3, backoff_cap=8),
+            degrade=DegradeConfig(mode=mode, ttl_epochs=3,
+                                  c_max=float(regions.max())),
+            seed=17)
+
+    def _spec(backend, faults):
+        return SweepSpec(
+            policies=policies, family=fam, traces=demand, targets=targets,
+            sim=cfg, backend=backend,
+            placement=PlacementConfig(
+                capacity=int(np.ceil(0.6 * n_traces)), min_dwell=6),
+            regions=regions, faults=faults)
+
+    results = {}
+    timings = {}
+    for mode in ("oracle", "ladder", "hold", "conservative"):
+        faults = None if mode == "oracle" else _plan(mode)
+        t0 = time.perf_counter()
+        results[mode] = _spec("fleet", faults).run()
+        timings[mode] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_jax = _spec("jax", _plan("ladder")).run()
+    jax_s = time.perf_counter() - t0
+
+    # per-epoch overshoot certificate: small recorded runs billed at the
+    # TRUE intensity (the sweep path never records (T, N) power at
+    # scale). The budget binds per epoch, so the overshoot that matters
+    # is max over (epoch, container) of rate/target - 1: hold-forever
+    # keeps budgeting on the trough reading while the true grid climbs,
+    # the ladder degrades to the prior/floor instead.
+    n_small = min(16, n_traces)
+    true_c = regions[:, 0]
+    sim = FleetSimulator(fam)
+    tgt_small = np.repeat(targets, n_small)
+    dem_small = np.tile(demand[:, :n_small], (1, n_targets))
+
+    # the first epochs pay the scale-down from the baseline slice -- an
+    # actuation transient every mode (incl. the oracle) shares, so the
+    # certificate starts once the actuator has settled
+    settle = 4
+
+    def _recorded_overshoot(mode):
+        if mode == "oracle":
+            obs = None
+        else:
+            sig = observe_intensity(true_c[:, None], _plan(mode), 300.0)
+            obs = sig.observed[:, 0]
+        rec = sim.run(CarbonContainerPolicy(), dem_small, true_c,
+                      tgt_small, record=True, carbon_obs=obs)
+        rate = rec.power_series[settle:] * true_c[settle:, None] / 1000.0
+        over = float(np.max(rate / tgt_small[None, :] - 1.0))
+        viol = budget_violations(rec.power_series[settle:],
+                                 true_c[settle:], tgt_small, 300.0)
+        return max(0.0, over), viol
+
+    over = {}
+    viols = {}
+    for mode in ("oracle", "ladder", "hold", "conservative"):
+        over[mode], viols[mode] = _recorded_overshoot(mode)
+    viol = viols["conservative"]
+    r0 = results["ladder"][0]
+    rows = [{"mode": m, "overshoot": over[m], "wall_s": timings[m],
+             **{k: r[k] for k in ("policy", "target", "carbon_rate_mean")}}
+            for m in results for r in results[m]]
+    derived = {
+        "n_containers": n_traces * n_targets,
+        "n_epochs": T,
+        "dropout_prob": 0.2,
+        "steady_s": timings["ladder"],
+        "jax_s": jax_s,
+        "oracle_overshoot": over["oracle"],
+        "ladder_overshoot": over["ladder"],
+        "hold_overshoot": over["hold"],
+        "conservative_overshoot": over["conservative"],
+        "ladder_excess_overshoot": over["ladder"] - over["oracle"],
+        "hold_excess_overshoot": over["hold"] - over["oracle"],
+        "conservative_budget_violations": viol,
+        "fault_stale_frac": r0["fault_stale_frac"],
+        "fault_failed_migrations_mean": r0["fault_failed_migrations_mean"],
+        "fault_unmetered_g_mean": r0["fault_unmetered_g_mean"],
+        "sweep_parity_max_rel_diff": results["ladder"].parity(res_jax),
+    }
+    return rows, derived

@@ -113,6 +113,12 @@ def main() -> None:
         ("energy_sweep", figs.energy_sweep,
          {"n_containers": 200, "days": 2} if fast
          else {"n_containers": 400, "days": 4}),
+        # signal-plane fault injection: degradation-ladder overshoot vs
+        # oracle/hold-forever, conservative zero-violation certificate,
+        # fleet-vs-jax parity with the full fault plan enabled
+        ("robustness_sweep", figs.robustness_sweep,
+         {"n_traces": 48, "n_targets": 2} if fast
+         else {"n_traces": 96, "n_targets": 3}),
     ]
     only = args.get("only")
     only_set = set(only.split(",")) if only else None

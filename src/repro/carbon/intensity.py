@@ -10,7 +10,7 @@ from typing import Protocol, Sequence
 
 import numpy as np
 
-from repro.carbon.traces import synth_trace
+from repro.carbon.traces import fill_gaps, synth_trace
 
 
 class CarbonIntensityProvider(Protocol):
@@ -30,13 +30,21 @@ class ConstantProvider:
 
 
 class TraceProvider:
-    """Hourly trace, piecewise constant, wraps around at the end."""
+    """Hourly trace, piecewise constant, wraps around at the end.
 
-    def __init__(self, hourly: Sequence[float], start_s: float = 0.0):
+    `gap_policy` guards against NaN gaps in the source trace (a missed
+    API sample): "raise" (default) rejects them at construction —
+    before they can propagate into emissions totals silently — while
+    "interpolate"/"hold" repair them via `repro.carbon.traces.fill_gaps`.
+    """
+
+    def __init__(self, hourly: Sequence[float], start_s: float = 0.0,
+                 gap_policy: str = "raise"):
         self.hourly = np.asarray(hourly, dtype=np.float64)
         self.start_s = start_s
         if len(self.hourly) == 0:
             raise ValueError("empty carbon trace")
+        self.hourly = fill_gaps(self.hourly, gap_policy)
 
     @classmethod
     def for_region(cls, region: str, hours: int = 24 * 30, seed: int = 0):

@@ -38,3 +38,43 @@ def synth_trace(region: str | RegionStats, hours: int = 24 * 30,
 
 def trace_cov(series: np.ndarray) -> float:
     return float(np.std(series) / np.mean(series))
+
+
+def fill_gaps(series, gap_policy: str = "raise") -> np.ndarray:
+    """Guard a carbon trace against NaN gaps (missing API samples).
+
+    gap_policy "raise" rejects any NaN with the gap positions named —
+    a gap that slips through multiplies straight into emissions totals
+    as NaN, silently. "interpolate" fills interior gaps linearly
+    between the surrounding real samples and holds the nearest real
+    sample at the edges; "hold" forward-fills the last real sample
+    (leading gaps take the first real one). An all-NaN series is
+    rejected under every policy.
+    """
+    s = np.asarray(series, dtype=np.float64)
+    nan = np.isnan(s)
+    if not nan.any():
+        return s
+    if gap_policy == "raise":
+        where = np.flatnonzero(nan)
+        head = ", ".join(str(i) for i in where[:8])
+        more = f" (+{where.size - 8} more)" if where.size > 8 else ""
+        raise ValueError(f"carbon trace has {where.size} NaN gap(s) at "
+                         f"indices [{head}]{more}; pass "
+                         f"gap_policy='interpolate' or 'hold' to fill")
+    if nan.all():
+        raise ValueError("carbon trace is all-NaN; nothing to fill from")
+    idx = np.arange(s.size, dtype=np.float64)
+    good = ~nan
+    if gap_policy == "interpolate":
+        # np.interp clamps to the edge values, so leading/trailing gaps
+        # hold the nearest real sample
+        return np.interp(idx, idx[good], s[good])
+    if gap_policy == "hold":
+        # forward-fill via the running index of the last real sample;
+        # leading gaps back-fill from the first one
+        last = np.maximum.accumulate(np.where(good, np.arange(s.size), -1))
+        first = int(np.flatnonzero(good)[0])
+        return s[np.where(last >= 0, last, first)]
+    raise ValueError(f"unknown gap_policy {gap_policy!r}; expected "
+                     f"'raise', 'interpolate' or 'hold'")

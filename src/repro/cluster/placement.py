@@ -94,6 +94,7 @@ class PlacementPlan:
     region_intensity: np.ndarray     # (T, R) g/kWh per region per epoch
     region_names: tuple
     initial: np.ndarray              # (N,) pre-epoch-0 region index
+    failed_migrations: Optional[np.ndarray] = None   # (N,) failed attempts
 
     @property
     def n_regions(self) -> int:
@@ -250,8 +251,19 @@ class PlacementEngine:
     # -- vectorized planner (the production path) -------------------------
 
     def plan(self, demand, state_gb: float = 1.0,
-             initial=None) -> PlacementPlan:
-        """(N, R)-vectorized plan; bit-compatible with `plan_scalar`."""
+             initial=None, faults=None) -> PlacementPlan:
+        """(N, R)-vectorized plan; bit-compatible with `plan_scalar`.
+
+        `faults` (a `repro.robustness.FaultPlan`) injects seeded
+        migration failures: a failed attempt pays the full stop-and-copy
+        cost (overhead grams + downtime) but the container stays put,
+        then waits `min(backoff_base * 2**(k-1), backoff_cap)` epochs
+        after its k-th consecutive failure before becoming eligible
+        again (capped exponential backoff). A successful move resets
+        the failure streak. Failed attempts land in
+        `PlacementPlan.failed_migrations`.
+        """
+        from repro.robustness.faults import migration_failure_mask
         demand, cmat, cap, assign, mig_s, cost0 = self._prep(
             demand, state_gb, initial)
         T, N = demand.shape
@@ -264,6 +276,14 @@ class PlacementEngine:
         h_hr = self.config.horizon_intervals * self.interval_s / 3600.0
         hk = 1.0 + self.config.hysteresis
         min_dwell = self.config.min_dwell
+        fail_mat = migration_failure_mask(faults, T, N)
+        if fail_mat is not None:
+            bb = int(faults.migration.backoff_base)
+            bc = int(faults.migration.backoff_cap)
+            fail_cnt = np.zeros(N, dtype=np.int64)
+            retry_at = np.zeros(N, dtype=np.int64)
+        failed_migrations = (np.zeros(N, dtype=np.int64)
+                             if fail_mat is not None else None)
 
         dwell = np.full(N, 10 ** 6, dtype=np.int64)   # first move is free
         migrations = np.zeros(N, dtype=np.int64)
@@ -284,6 +304,8 @@ class PlacementEngine:
                     / 1000.0)
             net = save - hk * cost                     # (N, R)
             eligible = dwell >= min_dwell
+            if fail_mat is not None:
+                eligible = eligible & (n >= retry_at)
             dst = np.full(N, -1, dtype=np.int64)
 
             if cap is None:
@@ -322,18 +344,35 @@ class PlacementEngine:
                     if not denied_any:
                         break
 
-            moved = dst >= 0
-            if np.count_nonzero(moved):
-                src = assign[moved]
-                dst_m = dst[moved]
-                overhead_g[moved] += (cost0[moved]
-                                      * (0.5 * (c_row[src] + c_row[dst_m]))
-                                      / 1000.0)
-                downtime_s[moved] += mig_s[moved]
+            attempted = dst >= 0
+            if fail_mat is None:
+                moved = attempted
+            else:
+                failed = attempted & fail_mat[n]
+                moved = attempted & ~failed
+            if np.count_nonzero(attempted):
+                # every attempt — failed or not — pays stop-and-copy:
+                # the container was checkpointed and (partially) copied
+                # before the destination rejected it
+                src = assign[attempted]
+                dst_a = dst[attempted]
+                overhead_g[attempted] += (cost0[attempted]
+                                          * (0.5 * (c_row[src]
+                                                    + c_row[dst_a]))
+                                          / 1000.0)
+                downtime_s[attempted] += mig_s[attempted]
                 migrations[moved] += 1
-                if occ is not None:
-                    np.subtract.at(occ, src, 1)
-                    np.add.at(occ, dst_m, 1)
+                if fail_mat is not None:
+                    failed_migrations[failed] += 1
+                    fail_cnt[failed] += 1
+                    fail_cnt[moved] = 0
+                    if np.count_nonzero(failed):
+                        k = np.minimum(fail_cnt[failed] - 1, 20)
+                        retry_at[failed] = n + 1 + np.minimum(
+                            bb * (2 ** k), bc)
+                if occ is not None and np.count_nonzero(moved):
+                    np.subtract.at(occ, assign[moved], 1)
+                    np.add.at(occ, dst[moved], 1)
                 assign = np.where(moved, dst, assign)
             dwell += 1
             dwell[moved] = 0
@@ -343,14 +382,17 @@ class PlacementEngine:
                              overhead_g=overhead_g, downtime_s=downtime_s,
                              region_intensity=cmat,
                              region_names=self.region_names,
-                             initial=assign0)
+                             initial=assign0,
+                             failed_migrations=failed_migrations)
 
     # -- greedy scalar reference (parity oracle) --------------------------
 
     def plan_scalar(self, demand, state_gb: float = 1.0,
-                    initial=None) -> PlacementPlan:
+                    initial=None, faults=None) -> PlacementPlan:
         """Pure-Python greedy reference; every float expression mirrors
-        `plan` term-for-term, so the two agree bit-for-bit."""
+        `plan` term-for-term, so the two agree bit-for-bit (including
+        the migration-failure + capped-backoff retry state)."""
+        from repro.robustness.faults import migration_failure_mask
         demand, cmat, cap, assign0, mig_s, cost0 = self._prep(
             demand, state_gb, initial)
         T, N = demand.shape
@@ -372,6 +414,14 @@ class PlacementEngine:
         assign_mat = np.empty((T, N), dtype=np.int64)
         occ = ([int(x) for x in np.bincount(assign0, minlength=R)]
                if cap is not None else None)
+        fail_mat = migration_failure_mask(faults, T, N)
+        if fail_mat is not None:
+            bb = int(faults.migration.backoff_base)
+            bc = int(faults.migration.backoff_cap)
+            fail_cnt = [0] * N
+            retry_at = [0] * N
+        failed_migrations = (np.zeros(N, dtype=np.int64)
+                             if fail_mat is not None else None)
 
         for n in range(T):
             c_row = [float(x) for x in cmat[n]]
@@ -405,6 +455,8 @@ class PlacementEngine:
                 for i in range(N):
                     if dst[i] >= 0 or dwell[i] < min_dwell:
                         continue
+                    if fail_mat is not None and n < retry_at[i]:
+                        continue               # backing off after a failure
                     row = nets[i]
                     best, net_best = 0, row[0]
                     for r in range(1, R):
@@ -427,11 +479,20 @@ class PlacementEngine:
                 if dst[i] < 0:
                     continue
                 a = assign[i]
+                # every attempt pays stop-and-copy, failed or not
                 overhead_g[i] += (float(cost0[i])
                                   * (0.5 * (c_row[a] + c_row[dst[i]]))
                                   / 1000.0)
                 downtime_s[i] += float(mig_s[i])
+                if fail_mat is not None and fail_mat[n, i]:
+                    failed_migrations[i] += 1
+                    fail_cnt[i] += 1
+                    k = min(fail_cnt[i] - 1, 20)
+                    retry_at[i] = n + 1 + min(bb * (2 ** k), bc)
+                    continue                   # pays the cost, stays put
                 migrations[i] += 1
+                if fail_mat is not None:
+                    fail_cnt[i] = 0
                 if occ is not None:
                     occ[a] -= 1
                     occ[dst[i]] += 1
@@ -445,7 +506,8 @@ class PlacementEngine:
                              overhead_g=overhead_g, downtime_s=downtime_s,
                              region_intensity=cmat,
                              region_names=self.region_names,
-                             initial=assign0.copy())
+                             initial=assign0.copy(),
+                             failed_migrations=failed_migrations)
 
     # -- placed fleet runs -------------------------------------------------
 

@@ -120,22 +120,34 @@ def _admission_round_xla(net, assign, eligible, dst, struck, remaining,
 @partial(jax.jit if HAS_JAX else lambda f, **kw: f,
          static_argnames=("R", "min_dwell", "has_cap", "base_b", "span_b",
                           "mult_b", "h_hr", "hk", "admission_impl",
-                          "block_n", "interpret"))
-def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s, *, R: int,
+                          "block_n", "interpret", "has_faults", "bb", "bc"))
+def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s,
+               fail_mat=None, *, R: int,
                min_dwell: int, has_cap: bool, base_b: float, span_b: float,
                mult_b: float, h_hr: float, hk: float,
                admission_impl: str = "xla", block_n: int = 8192,
-               interpret: bool = True):
+               interpret: bool = True, has_faults: bool = False,
+               bb: int = 1, bc: int = 16):
     """One XLA computation for the whole planning horizon. Mirrors
     `PlacementEngine.plan` term-for-term (see its docstring for the
     decision model). `admission_impl` here is already resolved to
-    "xla" or "pallas" (`plan_jax` resolves "auto")."""
+    "xla" or "pallas" (`plan_jax` resolves "auto"). With
+    `has_faults`, `fail_mat` is the shared (T, N) failed-migration
+    mask and the carry gains the retry state (fail streak + earliest
+    retry epoch, capped exponential backoff `min(bb * 2**k, bc)`)."""
     N = demand.shape[1]
     rows_r = jnp.arange(R, dtype=jnp.int32)
+    T = demand.shape[0]
+    t_vec = jnp.arange(T, dtype=jnp.int64)
 
     def step(st, x):
-        assign, dwell, migrations, overhead_g, downtime_s, occ = st
-        c_row, d = x
+        if has_faults:
+            (assign, dwell, migrations, overhead_g, downtime_s, occ,
+             fail_cnt, retry_at, failed_migrations) = st
+            c_row, d, fail_row, t_i = x
+        else:
+            assign, dwell, migrations, overhead_g, downtime_s, occ = st
+            c_row, d = x
         p_est = base_b + span_b * jnp.minimum(d / mult_b, 1.0)
         c_cur = _sel_region(c_row, assign, R)
         save = (p_est[:, None] * (c_cur[:, None] - c_row[None, :])
@@ -144,6 +156,8 @@ def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s, *, R: int,
                 / 1000.0)
         net = save - hk * cost                     # (N, R)
         eligible = dwell >= min_dwell
+        if has_faults:
+            eligible = eligible & (t_i >= retry_at)
 
         if not has_cap:
             best = jnp.argmax(net, axis=1).astype(jnp.int32)
@@ -188,13 +202,28 @@ def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s, *, R: int,
                 round_cond, round_body,
                 (dst0, struck0, remaining0, jnp.int32(0), jnp.bool_(True)))
 
-        moved = dst >= 0
-        dst_c = jnp.where(moved, dst, 0)
+        attempted = dst >= 0
+        if has_faults:
+            failed = attempted & fail_row
+            moved = attempted & ~failed
+        else:
+            moved = attempted
+        dst_c = jnp.where(attempted, dst, 0)
         c_dst = _sel_region(c_row, dst_c, R)
+        # every attempt — failed or not — pays stop-and-copy: the
+        # container was checkpointed and (partially) copied before the
+        # destination rejected it
         overhead_g = overhead_g + jnp.where(
-            moved, cost0 * (0.5 * (c_cur + c_dst)) / 1000.0, 0.0)
-        downtime_s = downtime_s + jnp.where(moved, mig_s, 0.0)
+            attempted, cost0 * (0.5 * (c_cur + c_dst)) / 1000.0, 0.0)
+        downtime_s = downtime_s + jnp.where(attempted, mig_s, 0.0)
         migrations = migrations + moved
+        if has_faults:
+            failed_migrations = failed_migrations + failed
+            fail_cnt = jnp.where(failed, fail_cnt + 1,
+                                 jnp.where(moved, 0, fail_cnt))
+            k = jnp.minimum(fail_cnt - 1, 20)
+            delay = jnp.minimum(bb * (2 ** jnp.maximum(k, 0)), bc)
+            retry_at = jnp.where(failed, t_i + 1 + delay, retry_at)
         if has_cap:
             src_oh = moved[:, None] & (assign[:, None] == rows_r[None, :])
             dst_oh = moved[:, None] & (dst_c[:, None] == rows_r[None, :])
@@ -202,6 +231,9 @@ def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s, *, R: int,
                    + dst_oh.sum(axis=0, dtype=jnp.int32))
         assign = jnp.where(moved, dst, assign)
         dwell = jnp.where(moved, 0, dwell + 1)
+        if has_faults:
+            return (assign, dwell, migrations, overhead_g, downtime_s,
+                    occ, fail_cnt, retry_at, failed_migrations), assign
         return (assign, dwell, migrations, overhead_g, downtime_s,
                 occ), assign
 
@@ -212,11 +244,18 @@ def _plan_scan(cmat, demand, assign0, occ0, cap, cost0, mig_s, *, R: int,
               jnp.zeros(N_, dtype=jnp.float64),
               jnp.zeros(N_, dtype=jnp.float64),
               occ0)
-    carry, assign_mat = lax.scan(step, carry0, (cmat, demand))
+    if has_faults:
+        carry0 = carry0 + (jnp.zeros(N_, dtype=jnp.int64),   # fail_cnt
+                           jnp.zeros(N_, dtype=jnp.int64),   # retry_at
+                           jnp.zeros(N_, dtype=jnp.int64))   # failed count
+        xs = (cmat, demand, fail_mat, t_vec)
+    else:
+        xs = (cmat, demand)
+    carry, assign_mat = lax.scan(step, carry0, xs)
     return carry, assign_mat
 
 
-def _trivial_plan(engine, cmat, assign0) -> PlacementPlan:
+def _trivial_plan(engine, cmat, assign0, has_faults=False) -> PlacementPlan:
     """Plan for shapes where no move is ever possible (N=0, R=1, T=0):
     every epoch keeps the initial assignment, zero overhead."""
     T = cmat.shape[0]
@@ -228,12 +267,14 @@ def _trivial_plan(engine, cmat, assign0) -> PlacementPlan:
         downtime_s=np.zeros(N, dtype=np.float64),
         region_intensity=cmat,
         region_names=engine.region_names,
-        initial=assign0.copy())
+        initial=assign0.copy(),
+        failed_migrations=np.zeros(N, dtype=np.int64) if has_faults
+        else None)
 
 
 def plan_jax(engine, demand, state_gb: float = 1.0, initial=None,
              admission_impl: str = "auto",
-             block_n: int = 8192) -> PlacementPlan:
+             block_n: int = 8192, faults=None) -> PlacementPlan:
     """Device-resident counterpart of `PlacementEngine.plan`: same
     inputs, same `PlacementPlan` out, one jit-compiled scan per shape.
 
@@ -243,20 +284,29 @@ def plan_jax(engine, demand, state_gb: float = 1.0, initial=None,
     `"auto"` — pallas on TPU/GPU, xla on CPU (see module docstring).
     Both are pinned to the NumPy planner by the parity suite (and the
     planner to the scalar reference at 1e-9).
+
+    `faults` (a `repro.robustness.FaultPlan`) injects the same seeded
+    migration-failure mask as `PlacementEngine.plan` — failed attempts
+    pay stop-and-copy but stay put and retry under capped exponential
+    backoff; parity with the NumPy planner is preserved because the
+    mask derivation is shared.
     """
     _require_jax()
     if admission_impl not in ADMISSION_IMPLS:
         raise ValueError(f"admission_impl must be one of {ADMISSION_IMPLS}, "
                          f"got {admission_impl!r}")
+    from repro.robustness.faults import migration_failure_mask
     demand, cmat, cap, assign0, mig_s, cost0 = engine._prep(
         demand, state_gb, initial)
     T, N = demand.shape
     R = engine.n_regions
+    fail_mat = migration_failure_mask(faults, T, N)
     if N == 0 or R == 1 or T == 0:
         # nothing can ever move: N=0 has no containers, R=1 has no
         # destination (argmax == current region always), T=0 no epochs —
         # skip tracing/compiling the round loop entirely
-        return _trivial_plan(engine, cmat, assign0)
+        return _trivial_plan(engine, cmat, assign0,
+                             has_faults=fail_mat is not None)
     if admission_impl == "auto":
         from repro.cluster.placement_pallas import default_interpret
         admission_impl = "xla" if default_interpret() else "pallas"
@@ -280,18 +330,29 @@ def plan_jax(engine, demand, state_gb: float = 1.0, initial=None,
         from repro.cluster.placement_pallas import default_interpret
         interpret = default_interpret()
 
+    has_faults = fail_mat is not None
+    fault_kw = {}
+    if has_faults:
+        fault_kw = dict(has_faults=True,
+                        bb=int(faults.migration.backoff_base),
+                        bc=int(faults.migration.backoff_cap))
+
     with enable_x64():
         carry, assign_mat = _plan_scan(
             jnp.asarray(cmat), jnp.asarray(demand),
             jnp.asarray(assign0.astype(np.int32)),
             jnp.asarray(occ_host), jnp.asarray(cap_host),
             jnp.asarray(cost0), jnp.asarray(mig_s),
+            jnp.asarray(fail_mat) if has_faults else None,
             R=R, min_dwell=int(cfg.min_dwell), has_cap=has_cap,
             base_b=base_b, span_b=span_b, mult_b=mult_b,
             h_hr=float(h_hr), hk=float(hk),
             admission_impl=admission_impl, block_n=int(block_n),
-            interpret=interpret)
-        (_, _, migrations, overhead_g, downtime_s, _) = jax.device_get(carry)
+            interpret=interpret, **fault_kw)
+        carry = jax.device_get(carry)
+        migrations, overhead_g, downtime_s = carry[2], carry[3], carry[4]
+        failed_migrations = (carry[8].astype(np.int64) if has_faults
+                             else None)
         assign_mat = jax.device_get(assign_mat)
 
     return PlacementPlan(assign=assign_mat.astype(np.int64),
@@ -300,4 +361,5 @@ def plan_jax(engine, demand, state_gb: float = 1.0, initial=None,
                          downtime_s=downtime_s,
                          region_intensity=cmat,
                          region_names=engine.region_names,
-                         initial=assign0.copy())
+                         initial=assign0.copy(),
+                         failed_migrations=failed_migrations)

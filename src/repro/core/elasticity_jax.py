@@ -159,7 +159,8 @@ def _budget_array(budget_series, cfg: ElasticityConfig, dt: float,
 def simulate_elastic_jax(demand, carbon, cfg: ElasticityConfig,
                          interval_s: float = 300.0,
                          record: bool = False,
-                         budget_series=None) -> ElasticResult:
+                         budget_series=None,
+                         carbon_forecast=None) -> ElasticResult:
     """JAX port of `repro.core.elasticity.simulate_elastic`.
 
     demand : (T, N) demand rate (host array)
@@ -172,6 +173,12 @@ def simulate_elastic_jax(demand, carbon, cfg: ElasticityConfig,
     `simulate_elastic`); when omitted and `cfg.shape_budget` is set it
     is derived host-side from the mean-over-containers carbon signal,
     matching the NumPy backend bit for bit.
+    `carbon_forecast` overrides the matrix the carbon forecaster runs
+    on — the scaler then plans against that signal while billing
+    `carbon` (the observed/true split under signal-plane faults):
+    (T, R) region form in indexed mode, (T, N) dense otherwise. The
+    fleet backend forecasts the very same matrix host-side, so the two
+    stay bit-identical (forecast-then-gather on both).
     """
     if not HAS_JAX:
         raise ImportError("simulate_elastic_jax requires jax; use "
@@ -197,7 +204,14 @@ def simulate_elastic_jax(demand, carbon, cfg: ElasticityConfig,
                              f"{codes.shape} do not match demand (T={T}, "
                              f"N={n})")
         R = region_mat.shape[1]
-        chat_reg = forecast_series(region_mat, fmode, period_steps=period,
+        fc_src = region_mat
+        if carbon_forecast is not None:
+            fc_src = np.asarray(carbon_forecast, dtype=np.float64)
+            if fc_src.shape != region_mat.shape:
+                raise ValueError(f"carbon_forecast shape {fc_src.shape} "
+                                 f"must match the region matrix "
+                                 f"{region_mat.shape}")
+        chat_reg = forecast_series(fc_src, fmode, period_steps=period,
                                    rho=cfg.rho)
         bud = _budget_array(budget_series, cfg, dt, T, lambda:
                             region_mat[np.arange(T)[:, None],
@@ -209,7 +223,13 @@ def simulate_elastic_jax(demand, carbon, cfg: ElasticityConfig,
             raise ValueError(f"carbon {carbon.shape} must match demand "
                              f"{demand.shape}")
         R = None
-        chat = forecast_series(carbon, fmode, period_steps=period,
+        fc_src = carbon
+        if carbon_forecast is not None:
+            fc_src = np.asarray(carbon_forecast, dtype=np.float64)
+            if fc_src.shape != carbon.shape:
+                raise ValueError(f"carbon_forecast shape {fc_src.shape} "
+                                 f"must match carbon {carbon.shape}")
+        chat = forecast_series(fc_src, fmode, period_steps=period,
                                rho=cfg.rho)
         bud = _budget_array(budget_series, cfg, dt, T,
                             lambda: carbon.mean(axis=1))

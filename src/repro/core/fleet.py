@@ -110,6 +110,8 @@ class FleetResult:
     baseline_cap: float
     power_series: Optional[np.ndarray] = None   # (T, N) when record=True
     served_series: Optional[np.ndarray] = None  # (T, N) when record=True
+    unmetered_g: Optional[np.ndarray] = None    # (N,) emissions billed during
+    #                                             power-telemetry gaps
 
     @property
     def n(self) -> int:
@@ -254,17 +256,36 @@ class FleetSimulator:
     # -- main loop --------------------------------------------------------
 
     def run(self, policy, demand, carbon, targets, epsilon=0.05,
-            state_gb=1.0, demand_scale=1.0, record: bool = False
-            ) -> FleetResult:
+            state_gb=1.0, demand_scale=1.0, record: bool = False,
+            carbon_obs=None, power_gap=None) -> FleetResult:
+        """`carbon_obs` (optional (T,) or (T, N) matrix) splits the
+        signal plane from the billing plane: decision kernels (and
+        their precomputed power budgets) consume the *observed*
+        intensity while emissions stay billed at the true `carbon` —
+        see `repro.robustness`. `power_gap` (optional (T,) 0/1 vector)
+        marks power-telemetry outage epochs; emissions during gaps are
+        still billed but also accumulated into
+        `FleetResult.unmetered_g` (the meter saw nothing)."""
         t = self.tables
         dt = self.interval_s
         (demand, cmat, targets, epsilon, state_gb, T, N) = \
             _prepare_run_inputs(demand, carbon, targets, epsilon, state_gb,
                                 demand_scale, self.interval_s)
+        if carbon_obs is not None:
+            carbon_obs = np.asarray(carbon_obs, dtype=np.float64)
+            if carbon_obs.shape not in ((T,), (T, N)):
+                raise ValueError(f"carbon_obs shape {carbon_obs.shape} "
+                                 f"does not match (T={T},) or (T, N={N})")
+        gap = None
+        if power_gap is not None:
+            gap = np.asarray(power_gap, dtype=np.float64)
+            if gap.shape != (T,):
+                raise ValueError(f"power_gap shape {gap.shape} != (T={T},)")
         cf = _closed_form_kind(policy)
         if cf is not None:
             return self._run_closed_form(cf, demand, cmat, targets, epsilon,
-                                         record)
+                                         record, cmat_obs=carbon_obs,
+                                         gap=gap)
         n_slices = len(t.multiple)
         st = FleetState.init(N, n_slices, t.baseline_idx)
         rows = np.arange(N)
@@ -273,14 +294,19 @@ class FleetSimulator:
         power = np.zeros(N)
         served = np.zeros(N)
         scratch = _LoopScratch(N)
+        unmet = np.zeros(N) if gap is not None else None
 
         # loop-invariant precomputations (hoisted out of the time loop):
         # rolling-window demand peaks (ContainerState.recent_peak) ...
         peak_mat = demand.copy()
         for k in range(1, _PEAK_WINDOW):
             np.maximum(peak_mat[k:], demand[:-k], out=peak_mat[k:])
-        # ... per-interval power budgets for the decision kernels ...
+        # ... per-interval power budgets for the decision kernels (from
+        # the observed feed — the controller has no other signal) ...
         cmat2 = cmat if cmat.ndim == 2 else cmat[:, None]
+        if carbon_obs is not None:
+            cmat2 = (carbon_obs if carbon_obs.ndim == 2
+                     else carbon_obs[:, None])
         budget_mat = _budget_batch(targets[None, :], cmat2, epsilon[None, :])
         # ... and the demand-integral increments
         ddt_mat = demand * dt
@@ -289,7 +315,7 @@ class FleetSimulator:
             self._loop(policy, st, demand, cmat, targets, epsilon, state_gb,
                        budget_mat, peak_mat, ddt_mat, power_series,
                        served_series, power, served, rows, T, N, n_slices,
-                       scratch)
+                       scratch, cmat_obs=carbon_obs, gap=gap, unmet=unmet)
         # elapsed accumulates dt once per interval for every container;
         # hoisted out of the loop as the identical sequential sum
         st.elapsed_s.fill(float(np.cumsum(np.full(T, dt))[-1]) if T else 0.0)
@@ -308,19 +334,26 @@ class FleetSimulator:
             baseline_cap=float(t.multiple[t.baseline_idx]),
             power_series=power_series,
             served_series=served_series,
+            unmetered_g=unmet,
         )
 
     def _loop(self, policy, st, demand, cmat, targets, epsilon, state_gb,
               budget_mat, peak_mat, ddt_mat, power_series, served_series,
-              power, served, rows, T, N, n_slices, scratch):
+              power, served, rows, T, N, n_slices, scratch,
+              cmat_obs=None, gap=None, unmet=None):
         t = self.tables
         dt = self.interval_s
         record = power_series is not None
         c_is_mat = cmat.ndim == 2
+        obs_is_mat = cmat_obs is not None and cmat_obs.ndim == 2
         sc = scratch
         for n in range(T):
             d = demand[n]
             c = cmat[n] if c_is_mat else float(cmat[n])
+            if cmat_obs is None:
+                c_dec = c
+            else:
+                c_dec = cmat_obs[n] if obs_is_mat else float(cmat_obs[n])
             st.demand_integral += ddt_mat[n]
             st.recent_peak = peak_mat[n]
 
@@ -337,8 +370,8 @@ class FleetSimulator:
                 np.add(sc.f1, sc.f2, out=sc.f1)
                 np.copyto(power, sc.f1, where=migm)
 
-            kind, dy, tg = policy.decide_batch(t, st, d, c, targets, epsilon,
-                                               budget=budget_mat[n])
+            kind, dy, tg = policy.decide_batch(t, st, d, c_dec, targets,
+                                               epsilon, budget=budget_mat[n])
             # fold the migrating containers out of `kind` so the per-action
             # masks below need no separate `& act` (copy, not in-place:
             # decide_batch's return stays the policy's to reuse)
@@ -442,6 +475,10 @@ class FleetSimulator:
             np.multiply(sc.f2, dt, out=sc.f2)
             np.divide(sc.f2, 3600.0, out=sc.f2)
             st.emissions_g += sc.f2
+            if unmet is not None and gap[n] > 0.0:
+                # telemetry outage: emissions happen but the meter is
+                # blind — bill them AND tally the unmetered share
+                unmet += sc.f2
             st.work_done += np.multiply(served, dt, out=sc.f3)
             np.subtract(d, served, out=sc.f4)
             np.maximum(0.0, sc.f4, out=sc.f4)
@@ -470,15 +507,18 @@ class FleetSimulator:
     # -- closed-form fast path for state-free policies --------------------
 
     def _run_closed_form(self, cf: str, demand, cmat, targets, epsilon,
-                         record: bool) -> FleetResult:
+                         record: bool, cmat_obs=None, gap=None
+                         ) -> FleetResult:
         """Whole-(T, N)-matrix evaluation for policies whose per-interval
         outcome does not depend on simulation state.
 
         CarbonAgnosticPolicy never leaves the baseline slice; for
         SuspendResumePolicy the suspension state each interval equals its
-        (state-independent) over-target predicate. Accumulators use
-        np.cumsum (sequential adds) so results stay bit-identical to the
-        stepping loop.
+        (state-independent) over-target predicate — evaluated on the
+        *observed* intensity when `cmat_obs` is given, while emissions
+        stay billed at the true `cmat`. Accumulators use np.cumsum
+        (sequential adds) so results stay bit-identical to the stepping
+        loop.
         """
         t = self.tables
         dt = self.interval_s
@@ -488,6 +528,10 @@ class FleetSimulator:
         base_b = t.base_w[b]
         span_b = t.peak_w[b] - base_b
         c2 = cmat if cmat.ndim == 2 else cmat[:, None]
+        if cmat_obs is None:
+            c2_obs = c2
+        else:
+            c2_obs = cmat_obs if cmat_obs.ndim == 2 else cmat_obs[:, None]
 
         srv = np.minimum(demand, mult_b)     # duty 1.0 on the baseline slice
         util = srv / mult_b
@@ -502,7 +546,8 @@ class FleetSimulator:
         parts = []                           # step matrices to accumulate
         if cf == "suspend_resume":
             # over <=> rate(power(u)) > (1-eps)*target, u == util bitwise
-            over = pw * c2 / 1000.0 > (1.0 - epsilon) * targets
+            # (predicate on the observed feed; billing stays on c2)
+            over = pw * c2_obs / 1000.0 > (1.0 - epsilon) * targets
             p_sus = 0.0 if self.suspend_releases_slice else base_b
             power = np.where(over, p_sus, pw)
             served = np.where(over, 0.0, srv)
@@ -527,6 +572,10 @@ class FleetSimulator:
                  demand * dt,
                  _chain(np.maximum(0.0, demand - served),
                         (np.multiply, dt))] + parts
+        if gap is not None:
+            # unmetered emissions: the per-epoch emission part masked to
+            # the telemetry-gap epochs, accumulated in the same walk
+            parts.append(parts[0] * gap[:, None])
         # sequential per-row accumulation (== the stepping loop's add order,
         # hence bit-identical); one fused (T, k*N) walk
         stacked = np.concatenate(parts, axis=1)
@@ -535,10 +584,14 @@ class FleetSimulator:
             acc += row
         emis, energy, work, dem, thr = (acc[k * N:(k + 1) * N]
                                         for k in range(5))
+        k_next = 5
         if cf == "suspend_resume":
             suspended_s = acc[5 * N:6 * N]
             tos[:, n_slices] = suspended_s
             tos[:, b] = acc[6 * N:7 * N]
+            k_next = 7
+        unmetered = (acc[k_next * N:(k_next + 1) * N] if gap is not None
+                     else None)
 
         return FleetResult(
             emissions_g=emis,
@@ -554,6 +607,7 @@ class FleetSimulator:
             baseline_cap=float(t.multiple[t.baseline_idx]),
             power_series=power if record else None,
             served_series=served if record else None,
+            unmetered_g=unmetered,
         )
 
 
@@ -615,16 +669,42 @@ class BlockPolicy:
 # Population sweep on the fleet path (backend="fleet" in sweep_population)
 # ---------------------------------------------------------------------------
 
+class _FaultContext:
+    """Materialized signal-plane faults for one sweep (host-side, shared
+    verbatim by the fleet and jax backends so degraded signals are
+    identical by construction): the degraded `ObservedSignal`, the
+    observed and true (T, R) region matrices (or (T, n_tr) dense
+    matrices on placement-free sweeps), and the (T,) power-telemetry
+    gap vector (None when the plan has no gaps)."""
+
+    __slots__ = ("signal", "obs_reg", "true_reg", "gap_vec", "faults")
+
+    def __init__(self, signal, obs_reg, true_reg, gap_vec, faults):
+        self.signal = signal
+        self.obs_reg = obs_reg
+        self.true_reg = true_reg
+        self.gap_vec = gap_vec
+        self.faults = faults
+
+
 def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
                           placement, plan_fn, tile: bool = True,
-                          energy=None):
+                          energy=None, faults=None):
     """Shared sweep prologue for the fleet and jax backends (one
     implementation so the two can never drift on what sweeps they
     accept): stack the equal-length traces into the policy-block demand
     matrix, tile targets, and — with a placement engine — compute the
     shared region plan on the real n_tr-column fleet via `plan_fn` and
     substitute the planned per-container carbon matrix. Returns
-    (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up).
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up, fault_ctx).
+
+    With ``faults`` (a `repro.robustness.FaultPlan`), the *planner*
+    (and via `plan.region_intensity` every downstream controller layer
+    — traffic routing, elastic budgets/forecasts) consumes the degraded
+    observed feed, while the returned billing `carbon` is gathered from
+    the TRUE region matrix; `plan_fn` receives the fault plan so the
+    planner threads the seeded migration-failure mask. ``fault_ctx``
+    carries the observed/true split for the caller.
 
     With ``tile=False`` (the jax backend's memory-lean placed sweep)
     the demand matrix stays compact — (T, n_tr), NOT target-tiled —
@@ -656,6 +736,8 @@ def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
 
     plan = None
     grid_up = None
+    fault_ctx = None
+    T = stack.shape[0]
     if energy is not None and placement is None:
         raise ValueError("energy=EnergyConfig(...) requires a placement "
                          "engine (placement=...): the supply side — "
@@ -667,23 +749,58 @@ def _prepare_sweep_inputs(traces, carbon, targets, cfg_base, demand_scale,
                 f"{placement.interval_s} but the sweep simulates at "
                 f"interval_s={cfg_base.interval_s}; construct the engine "
                 f"with the sweep's interval")
+        import copy
         if energy is not None:
-            import copy
             from repro.energy.supply import event_matrices
-            T = stack.shape[0]
             raw = placement._region_matrix(T)
             shock_mult, grid_up = event_matrices(energy.events, T,
                                                  placement.n_regions)
             placement = copy.copy(placement)
             placement.regions = raw * shock_mult
+        if faults is not None:
+            from repro.robustness.degrade import observe_intensity
+            from repro.robustness.faults import power_gap_vector
+            # TRUE regional signal (post grid shocks — those are
+            # physical); the controller plane sees the degraded feed
+            true_reg = placement._region_matrix(T)
+            signal = observe_intensity(true_reg, faults,
+                                       cfg_base.interval_s)
+            placement = copy.copy(placement)
+            placement.regions = signal.observed
+            fault_ctx = _FaultContext(signal, signal.observed, true_reg,
+                                      power_gap_vector(faults, T), faults)
         demand_plan = stack
         if demand_scale is not None and np.any(
                 np.asarray(demand_scale) != 1.0):
             demand_plan = stack * demand_scale
-        plan = plan_fn(placement, demand_plan)
-        carbon = (np.tile(plan.carbon_matrix(), (1, n_tg)) if tile
-                  else None)
-    return demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up
+        plan = plan_fn(placement, demand_plan, faults)
+        if tile:
+            if fault_ctx is None:
+                carbon = np.tile(plan.carbon_matrix(), (1, n_tg))
+            else:
+                # bill at the TRUE intensity of each planned region;
+                # the plan's own matrix is the observed feed
+                dense_true = fault_ctx.true_reg[np.arange(T)[:, None],
+                                                plan.assign[:T]]
+                carbon = np.tile(dense_true, (1, n_tg))
+        else:
+            carbon = None
+    elif faults is not None:
+        from repro.robustness.degrade import observe_intensity
+        from repro.robustness.faults import power_gap_vector
+        if carbon is None:
+            raise ValueError("faults without a placement engine need an "
+                             "explicit carbon signal to degrade")
+        true_mat = _carbon_matrix(carbon, T, cfg_base.interval_s)
+        true2 = true_mat if true_mat.ndim == 2 else true_mat[:, None]
+        signal = observe_intensity(true2, faults, cfg_base.interval_s)
+        obs = (signal.observed if true_mat.ndim == 2
+               else signal.observed[:, 0])
+        fault_ctx = _FaultContext(signal, obs, true_mat,
+                                  power_gap_vector(faults, T), faults)
+        carbon = true_mat
+    return (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up,
+            fault_ctx)
 
 
 def _prepare_traffic(traffic, plan, T: int, interval_s: float):
@@ -711,7 +828,7 @@ def _prepare_traffic(traffic, plan, T: int, interval_s: float):
 
 
 def _prepare_energy(energy, family, plan, comp, T: int, interval_s: float,
-                    grid_up):
+                    grid_up, region_mat=None):
     """Shared energy prologue for the fleet and jax sweep backends: run
     the host supply simulation on the compact fleet's per-region
     flexible load and gather the two per-container signals. Returns
@@ -726,7 +843,11 @@ def _prepare_energy(energy, family, plan, comp, T: int, interval_s: float,
     exactly on the supplied power. Both backends call this one helper —
     the supply ledger and the `energy_*` row metrics are bit-identical
     across backends; only the *application* of cap_frac/c_eff differs
-    (host gather on the fleet path, in-scan fold on the jax path)."""
+    (host gather on the fleet path, in-scan fold on the jax path).
+
+    `region_mat` overrides the (T, R) grid intensity the *physical*
+    supply runs on — under signal-plane faults the plan's matrix is the
+    degraded observed feed, but electrons mix at the TRUE intensity."""
     from repro.energy.supply import (EnergySpec, flex_w_per_unit,
                                      simulate_supply, solar_series)
     R = plan.n_regions
@@ -741,8 +862,9 @@ def _prepare_energy(energy, family, plan, comp, T: int, interval_s: float,
         # (matters at the N=100k scale gate)
         np.sum(comp, axis=1, where=(assign == r), out=load[:, r])
     load *= spec.load_coef
-    sres = simulate_supply(load, solar, plan.region_intensity[:T], grid_up,
-                           spec)
+    grid_c = (plan.region_intensity[:T] if region_mat is None
+              else region_mat[:T])
+    sres = simulate_supply(load, solar, grid_c, grid_up, spec)
     rows = np.arange(T)[:, None]
     cap_cols = sres.cap_frac[rows, assign]
     ceff_cols = sres.c_eff[rows, assign]
@@ -754,7 +876,8 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
                            cfg_base: SimConfig,
                            demand_scale: float = 1.0,
                            placement=None, traffic=None,
-                           elasticity=None, energy=None) -> list:
+                           elasticity=None, energy=None,
+                           faults=None) -> list:
     """Fleet-backed `sweep_population`: batches every (policy x target x
     trace) combination into ONE FleetSimulator.run call (policy-major
     column blocks via BlockPolicy) and emits the same aggregate rows, in
@@ -794,15 +917,33 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
     metrics. Order is pinned — demand_scale, then traffic, then
     energy, then elasticity — and shared with the jax backend so the
     parity chain holds with all layers on.
+
+    With `faults` (a `repro.robustness.FaultPlan`), every controller
+    layer — decision kernels, placement planner, traffic routing,
+    elastic budgets and forecasts — consumes the degraded *observed*
+    carbon feed while emissions stay billed at the true one; planned
+    migrations fail per the seeded mask (stop-and-copy paid, container
+    stays put, capped-backoff retry) and power-telemetry gaps accrue
+    `unmetered_g`. Rows gain the `fault_*` summaries.
     """
-    (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up) = \
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up, fault_ctx) = \
         _prepare_sweep_inputs(traces, carbon, targets, cfg_base,
                               demand_scale, placement,
-                              lambda eng, d: eng.plan(
-                                  d, state_gb=cfg_base.state_gb),
-                              energy=energy)
+                              lambda eng, d, flt: eng.plan(
+                                  d, state_gb=cfg_base.state_gb, faults=flt),
+                              energy=energy, faults=faults)
     per_pol = n_tr * n_tg
     T = demand_one.shape[0]
+    gap_vec = fault_ctx.gap_vec if fault_ctx is not None else None
+    carbon_obs = None
+    if fault_ctx is not None:
+        if plan is not None:
+            # plan.carbon_matrix() gathers plan.region_intensity — which
+            # IS the observed feed under faults
+            carbon_obs = np.tile(plan.carbon_matrix(), (1, n_tg))
+        else:
+            obs = fault_ctx.obs_reg
+            carbon_obs = np.tile(obs, (1, n_tg)) if obs.ndim == 2 else obs
 
     traffic_summary = None
     mod_cols = None
@@ -829,11 +970,26 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
     ceff_reg = None
     if energy is not None:
         _, sres, _, cap_cols, ceff_cols = _prepare_energy(
-            energy, family, plan, comp, T, cfg_base.interval_s, grid_up)
+            energy, family, plan, comp, T, cfg_base.interval_s, grid_up,
+            region_mat=(fault_ctx.true_reg if fault_ctx is not None
+                        else None))
         energy_summary = sres.summary()
         comp = comp * cap_cols              # enforce the virtual cap
         carbon = np.tile(ceff_cols, (1, n_tg))   # bill the delivered mix
         ceff_reg = sres.c_eff               # forecast the delivered mix too
+        if fault_ctx is not None:
+            # the controller observes the delivered mix through the same
+            # degraded feed: scale the true effective intensity by the
+            # per-region observed/true grid ratio
+            tr = fault_ctx.true_reg[:T]
+            safe = np.where(tr > 0.0, tr, 1.0)
+            ratio = np.where(tr > 0.0,
+                             fault_ctx.obs_reg[:T] / safe, 1.0)
+            ceff_obs_reg = sres.c_eff * ratio
+            rows_t = np.arange(T)[:, None]
+            carbon_obs = np.tile(ceff_obs_reg[rows_t, plan.assign[:T]],
+                                 (1, n_tg))
+            ceff_reg = ceff_obs_reg         # controller-side forecast feed
 
     elastic_summary = None
     if elasticity is not None:
@@ -857,7 +1013,8 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
     sim = FleetSimulator(family, interval_s=cfg_base.interval_s,
                          suspend_releases_slice=cfg_base.suspend_releases_slice)
     run_kw = dict(epsilon=cfg_base.epsilon, state_gb=cfg_base.state_gb,
-                  demand_scale=demand_scale)
+                  demand_scale=demand_scale, carbon_obs=carbon_obs,
+                  power_gap=gap_vec)
 
     # state-free policies go straight through the closed-form path; the
     # stateful rest share one stepping run via BlockPolicy column blocks
@@ -882,14 +1039,23 @@ def sweep_population_fleet(policies: dict, family: SliceFamily, traces,
         carbon_blk = carbon
         if isinstance(carbon, np.ndarray) and carbon.ndim == 2:
             carbon_blk = np.tile(carbon, (1, len(loop_pols)))
+        blk_kw = dict(run_kw)
+        if isinstance(carbon_obs, np.ndarray) and carbon_obs.ndim == 2:
+            blk_kw["carbon_obs"] = np.tile(carbon_obs, (1, len(loop_pols)))
         res = sim.run(BlockPolicy(blocks), demand, carbon_blk, tgt_vec,
-                      **run_kw)
+                      **blk_kw)
         for p, (name, _) in enumerate(loop_pols):
             results[name] = (res, p * per_pol)
 
+    fault_summary = None
+    if fault_ctx is not None:
+        fault_summary = fault_ctx.signal.summary()
+        if plan is not None and plan.failed_migrations is not None:
+            fault_summary["fault_failed_migrations_mean"] = float(
+                np.mean(plan.failed_migrations))
     return _aggregate_sweep_rows(policies, results, targets, n_tr, plan,
                                  traffic_summary, elastic_summary,
-                                 energy_summary)
+                                 energy_summary, fault_summary)
 
 
 def _elastic_carbon_forecast(plan, T: int, elasticity, interval_s: float,
@@ -929,7 +1095,8 @@ def _elastic_budget_series(plan, T: int, elasticity, interval_s: float):
 
 def _aggregate_sweep_rows(policies: dict, results: dict, targets, n_tr: int,
                           plan=None, traffic_summary=None,
-                          elastic_summary=None, energy_summary=None) -> list:
+                          elastic_summary=None, energy_summary=None,
+                          fault_summary=None) -> list:
     """Fold per-container FleetResult arrays into the sweep's aggregate
     rows. `results` maps policy name -> (FleetResult, column offset);
     shared by the fleet and jax sweep backends so the two emit the same
@@ -988,5 +1155,12 @@ def _aggregate_sweep_rows(policies: dict, results: dict, targets, n_tr: int,
             if energy_summary is not None:
                 # one supply simulation per sweep, shared by backends
                 row.update(energy_summary)
+            if fault_summary is not None:
+                # degraded-signal + failed-migration summaries; one
+                # observation pass per sweep, shared by backends
+                row.update(fault_summary)
+                if res.unmetered_g is not None:
+                    row["fault_unmetered_g_mean"] = float(
+                        np.mean(res.unmetered_g[sl]))
             rows.append(row)
     return rows

@@ -448,7 +448,7 @@ _DECIDERS = {"agnostic": _decide_agnostic, "suspend_resume": _decide_sr,
          static_argnames=("spec", "srs", "record", "tabs", "dt", "mig",
                           "cmode", "n_rep", "R", "traffic", "energy"))
 def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
-                solar_mat=None, up_mat=None, *,
+                solar_mat=None, up_mat=None, obs_mat=None, gap_vec=None, *,
                 spec: tuple, srs: bool, record: bool, tabs: _TablesS,
                 dt: float, mig: tuple, cmode: str = "dense", n_rep: int = 1,
                 R: int = 0, traffic=None, energy=None):
@@ -503,6 +503,17 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
     backend). Reuses the traffic path's extra accumulator row for
     `work_demanded`.
 
+    `obs_mat` (optional xs tensor) splits the signal plane from the
+    billing plane: decision kernels and their per-epoch power budgets
+    consume the *observed* intensity row — (T, R) in indexed mode
+    (selected through the same R-way chain, and with the energy fold
+    scaled onto the delivered mix by the per-region observed/true
+    ratio), (T,) or (T, N) dense — while emissions stay billed at the
+    true feed. The traffic fold routes on the observed row too (the
+    router is a controller). `gap_vec` (optional (T,) xs vector) marks
+    power-telemetry outage epochs; an extra accumulator row sums the
+    gap epochs' emissions (`unmetered_g`).
+
     Returns the final carry tuple (+ optional (T, N) power/served series).
     """
     if cmode == "indexed":
@@ -532,9 +543,12 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
     sr_budget = ((1.0 - eps) * targets if suspend_r
                  else jnp.zeros((), dtype=jnp.float64))
 
+    has_obs = obs_mat is not None
+    has_gap = gap_vec is not None
     tos_cols = jnp.arange(S + 1, dtype=jnp.int32)
-    n_acc = _ACC_ROWS + (1 if (traffic is not None or energy is not None)
-                         else 0)
+    n_acc = (_ACC_ROWS
+             + (1 if (traffic is not None or energy is not None) else 0)
+             + (1 if has_gap else 0))
     acc0 = jnp.zeros((n_acc, N), dtype=jnp.float64)
     rep0 = (jnp.full(R, float(traffic.min_rep), dtype=jnp.float64)
             if traffic is not None else None)
@@ -563,6 +577,15 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
         if traffic is not None:
             rep = st[-1]
             st = st[:-1]
+        # observed-feed / gap xs ride at the tail: pop them first
+        g = None
+        if has_gap:
+            g = x[-1]
+            x = x[:-1]
+        obs_row = None
+        if has_obs:
+            obs_row = x[-1]
+            x = x[:-1]
         if cmode == "indexed":
             if energy is not None:
                 sol_row, up_row = x[-2], x[-1]
@@ -571,7 +594,9 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
                 d, code, c_row, req = x
                 # route this epoch's requests by the carbon row, scale
                 # the replica fleets; the serving loads modulate demand
-                rep1, t_outs = traffic_step(traffic, rep, req, c_row)
+                # (the router is a controller: it sees the observed feed)
+                rep1, t_outs = traffic_step(
+                    traffic, rep, req, obs_row if has_obs else c_row)
                 mod_row = t_outs[0]
                 mod = jnp.full(code.shape, mod_row[0], dtype=jnp.float64)
                 for r in range(1, R):
@@ -589,9 +614,18 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
                 load_row = jnp.stack(
                     [jnp.sum(jnp.where(code == r, d, 0.0))
                      for r in range(R)]) * energy.load_coef
+                c_raw = c_row           # true grid row, pre-delivered-mix
                 soc1, e_outs = energy_step(energy, soc, load_row,
                                            sol_row, c_row, up_row)
                 cap_row, c_row = e_outs[5], e_outs[6]
+                if has_obs:
+                    # the controller observes the delivered mix through
+                    # the degraded feed: scale the effective intensity
+                    # by the per-region observed/true grid ratio (same
+                    # floats as the fleet backend's ceff_obs_reg)
+                    raw_safe = jnp.where(c_raw > 0.0, c_raw, 1.0)
+                    obs_row = c_row * jnp.where(
+                        c_raw > 0.0, obs_row / raw_safe, 1.0)
                 capsel = jnp.full(code.shape, cap_row[0],
                                   dtype=jnp.float64)
                 for r in range(1, R):
@@ -602,11 +636,21 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
             c = jnp.full(code.shape, c_row[0], dtype=jnp.float64)
             for r in range(1, R):
                 c = jnp.where(code == r, c_row[r], c)
+            if has_obs:
+                c_dec = jnp.full(code.shape, obs_row[0], dtype=jnp.float64)
+                for r in range(1, R):
+                    c_dec = jnp.where(code == r, obs_row[r], c_dec)
             if n_rep > 1:
                 d = jnp.tile(d, n_rep)
                 c = jnp.tile(c, n_rep)
+                if has_obs:
+                    c_dec = jnp.tile(c_dec, n_rep)
         else:
             d, c = x
+            if has_obs:
+                c_dec = obs_row
+        if not has_obs:
+            c_dec = c
         if use_peak:
             acc, dynf, dyni, win = st
             peak = d
@@ -624,8 +668,8 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
         elif suspend_r:
             budget = sr_budget
         else:
-            c_safe = jnp.where(c <= 0.0, 1.0, c)
-            budget = jnp.where(c <= 0.0, jnp.inf,
+            c_safe = jnp.where(c_dec <= 0.0, 1.0, c_dec)
+            budget = jnp.where(c_dec <= 0.0, jnp.inf,
                                (1.0 - eps) * targets * 1000.0 / c_safe)
         i0 = dyni[_I_SLICE]
         mt0 = dyni[_I_MT]
@@ -635,7 +679,7 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
         migr_s0 = dynf[1]
         migm = migr_s0 > 0.0
 
-        kind, dy, tg = decide(spec, tabs, i0, sus, dwell0, peak, d, c,
+        kind, dy, tg = decide(spec, tabs, i0, sus, dwell0, peak, d, c_dec,
                               budget)
         kind = jnp.where(migm, -1, kind)
         dstc = jnp.where(kind == K_MIGRATE, tg, 0)
@@ -705,6 +749,9 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
                 jnp.maximum(0.0, d - served)]           # -> throttled
         if traffic is not None or energy is not None:
             rows.append(d)                              # -> work_demanded
+        if has_gap:
+            # telemetry outage: emissions happen but the meter is blind
+            rows.append(rows[0] * g)                    # -> unmetered_g
         contribs = jnp.stack(rows)
         acc1 = acc + contribs
 
@@ -749,6 +796,10 @@ def _fleet_scan(demand, cmat, targets, eps, state_gb, req_mat=None,
             xs = xs + (solar_mat, up_mat)
     else:
         xs = (demand, cmat)
+    if has_obs:
+        xs = xs + (obs_mat,)
+    if has_gap:
+        xs = xs + (gap_vec,)
     carry, ys = lax.scan(step, st0, xs)
     return carry[:3], ys
 
@@ -779,7 +830,8 @@ class FleetSimulatorJax:
 
     def run(self, policy, demand, carbon, targets, epsilon=0.05,
             state_gb=1.0, demand_scale=1.0, record: bool = False,
-            n_rep: int = 1, traffic=None, energy=None) -> FleetResult:
+            n_rep: int = 1, traffic=None, energy=None,
+            carbon_obs=None, power_gap=None) -> FleetResult:
         """Advance the fleet; same contract as `FleetSimulator.run`, plus
         the memory-lean indexed-carbon form: `carbon` may be a
         ``(region_mat (T, R), codes (T, n_cols) int)`` pair — a
@@ -799,6 +851,15 @@ class FleetSimulatorJax:
         advances the virtual energy supply each epoch, clamping demand
         by the per-region virtual-cap fraction and billing emissions at
         the delivered mix's effective intensity (see `_fleet_scan`).
+
+        `carbon_obs` splits the signal plane from the billing plane
+        (see `_fleet_scan`): the policy decides — and budgets — on the
+        observed intensity while emissions stay billed at `carbon`.
+        Indexed runs take a (T, R) observed region matrix; dense runs a
+        (T,) or (T, N) observed matrix. `power_gap` is a (T,) 0/1
+        vector of power-telemetry outage epochs; the result then
+        carries `unmetered_g`, the emissions accrued while the meter
+        was blind.
         """
         spec = _policy_spec(policy)
         t = self.tables
@@ -862,6 +923,23 @@ class FleetSimulatorJax:
                 _prepare_run_inputs(demand, carbon, targets, epsilon,
                                     state_gb, demand_scale, self.interval_s)
             R = 0
+        if carbon_obs is not None:
+            carbon_obs = np.asarray(carbon_obs, dtype=np.float64)
+            if indexed:
+                if carbon_obs.shape != (T, R):
+                    raise ValueError(f"observed carbon shape "
+                                     f"{carbon_obs.shape}; indexed runs "
+                                     f"need the (T, R) region form "
+                                     f"{(T, R)}")
+            elif carbon_obs.shape not in ((T,), (T, N)):
+                raise ValueError(f"observed carbon shape "
+                                 f"{carbon_obs.shape} does not match "
+                                 f"(T,)={T,} or (T, N)={(T, N)}")
+        if power_gap is not None:
+            power_gap = np.asarray(power_gap, dtype=np.float64)
+            if power_gap.shape != (T,):
+                raise ValueError(f"power-gap vector shape "
+                                 f"{power_gap.shape}; expected {(T,)}")
 
         # container-parallel sharding: containers never interact, so the
         # fleet splits into contiguous column shards dispatched to the
@@ -897,23 +975,36 @@ class FleetSimulatorJax:
                           if energy is not None else None)
                     um = (jax.device_put(up_mat, dev)
                           if energy is not None else None)
+                    ob = (jax.device_put(carbon_obs, dev)
+                          if carbon_obs is not None else None)
+                    gp = (jax.device_put(power_gap, dev)
+                          if power_gap is not None else None)
                     outs.append(_fleet_scan(
                         dm, cm,
                         jax.device_put(targets[lo:hi], dev),
                         jax.device_put(epsilon[lo:hi], dev),
                         jax.device_put(state_gb[lo:hi], dev), rq, sm, um,
+                        ob, gp,
                         cmode="indexed", n_rep=hi_r - lo_r, R=R,
                         traffic=t_spec, energy=e_spec, **kw))
                 else:
                     lo = s * N // n_sh
                     hi = (s + 1) * N // n_sh
                     cm = cmat if cmat.ndim == 1 else cmat[:, lo:hi]
+                    ob = None
+                    if carbon_obs is not None:
+                        ob = (carbon_obs if carbon_obs.ndim == 1
+                              else carbon_obs[:, lo:hi])
+                        ob = jax.device_put(ob, dev)
+                    gp = (jax.device_put(power_gap, dev)
+                          if power_gap is not None else None)
                     outs.append(_fleet_scan(
                         jax.device_put(demand[:, lo:hi], dev),
                         jax.device_put(cm, dev),
                         jax.device_put(targets[lo:hi], dev),
                         jax.device_put(epsilon[lo:hi], dev),
-                        jax.device_put(state_gb[lo:hi], dev), **kw))
+                        jax.device_put(state_gb[lo:hi], dev),
+                        obs_mat=ob, gap_vec=gp, **kw))
             acc = np.concatenate(
                 [jax.device_get(o[0][0]) for o in outs], axis=1)
             dyni = np.concatenate(
@@ -950,6 +1041,8 @@ class FleetSimulatorJax:
             baseline_cap=float(t.multiple[t.baseline_idx]),
             power_series=ys[0] if record else None,
             served_series=ys[1] if record else None,
+            unmetered_g=(acc[-1] / 1000.0 * dt / 3600.0
+                         if power_gap is not None else None),
         )
 
 
@@ -963,7 +1056,8 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                          demand_scale: float = 1.0,
                          placement=None, traffic=None,
                          elasticity=None, energy=None,
-                         admission_impl: str = "auto") -> list:
+                         admission_impl: str = "auto",
+                         faults=None) -> list:
     """JAX-backed `sweep_population`: one device-resident scan per policy
     over all (target x trace) columns, same aggregate rows, same order,
     as the fleet backend (parity pinned <= 1e-6 by the test suite).
@@ -979,23 +1073,44 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
     select reproduces the gathered matrix bit-exactly, so sweep parity
     with the fleet backend is unchanged. `admission_impl` is forwarded
     to `plan_jax` ("auto" | "xla" | "pallas").
+
+    With `faults` (a `repro.robustness.FaultPlan`), the observed/true
+    split is materialized host-side by the *shared* prologue — the jax
+    planner threads the same seeded migration-failure mask, the scan
+    decides on the (T, R) observed region matrix (R-way selected in
+    step, so still nothing (T, N)) while billing the true one, and
+    power-telemetry gaps accrue `unmetered_g` — so the degraded
+    signals are identical to the fleet backend's by construction.
     """
     _require_jax()
 
-    def _plan(eng, demand_plan):
+    def _plan(eng, demand_plan, flt):
         from repro.cluster.placement_jax import plan_jax
         return plan_jax(eng, demand_plan, state_gb=cfg_base.state_gb,
-                        admission_impl=admission_impl)
+                        admission_impl=admission_impl, faults=flt)
 
     compact = placement is not None
-    (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up) = \
+    (demand_one, tgt_one, carbon, plan, n_tr, n_tg, grid_up, fault_ctx) = \
         _prepare_sweep_inputs(traces, carbon, targets, cfg_base,
                               demand_scale, placement, _plan,
-                              tile=not compact, energy=energy)
+                              tile=not compact, energy=energy,
+                              faults=faults)
     n_rep = 1
+    carbon_obs = None
+    gap_vec = fault_ctx.gap_vec if fault_ctx is not None else None
     if compact:
-        carbon = (plan.region_intensity, plan.assign.astype(np.int32))
+        if fault_ctx is None:
+            carbon = (plan.region_intensity, plan.assign.astype(np.int32))
+        else:
+            # bill at the TRUE region intensities; the plan's own table
+            # (region_intensity) IS the observed feed under faults and
+            # becomes the scan's decision signal
+            carbon = (fault_ctx.true_reg, plan.assign.astype(np.int32))
+            carbon_obs = plan.region_intensity
         n_rep = n_tg
+    elif fault_ctx is not None:
+        obs = fault_ctx.obs_reg
+        carbon_obs = np.tile(obs, (1, n_tg)) if obs.ndim == 2 else obs
 
     traffic_summary = None
     run_traffic = None
@@ -1035,16 +1150,25 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
 
     energy_summary = None
     run_energy = None
+    ela_forecast = None
+    if fault_ctx is not None and compact:
+        # controller-side forecast feed: the observed grid (overridden
+        # below onto the delivered mix when the energy layer is on)
+        ela_forecast = plan.region_intensity
     if energy is not None:
         spec_e, sres, solar_mat, cap_cols, ceff_cols = _prepare_energy(
-            energy, family, plan, comp, T, cfg_base.interval_s, grid_up)
+            energy, family, plan, comp, T, cfg_base.interval_s, grid_up,
+            region_mat=(fault_ctx.true_reg if fault_ctx is not None
+                        else None))
         energy_summary = sres.summary()
         if elasticity is None:
             # in-scan fold: the scan re-derives the supply ledger on
             # device from the (traffic-modulated) demand and applies
             # cap/c_eff per epoch; the energy_* row metrics above come
             # from the shared host simulation (the two agree <=1e-6,
-            # pinned by the energy tests)
+            # pinned by the energy tests). Under faults the raw
+            # observed grid rides along as obs_mat and the step scales
+            # it onto the delivered mix by the observed/true ratio.
             run_energy = (spec_e, solar_mat, grid_up)
         else:
             # with elasticity downstream the cap must land *before* the
@@ -1053,6 +1177,16 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
             # to the delivered mix's effective intensity
             comp = comp * cap_cols
             carbon = (sres.c_eff, plan.assign.astype(np.int32))
+            if fault_ctx is not None:
+                # observed delivered mix: true effective intensity
+                # scaled by the per-region observed/true grid ratio —
+                # same host floats as the fleet backend
+                tr = fault_ctx.true_reg[:T]
+                safe = np.where(tr > 0.0, tr, 1.0)
+                ratio = np.where(tr > 0.0,
+                                 fault_ctx.obs_reg[:T] / safe, 1.0)
+                carbon_obs = sres.c_eff * ratio
+                ela_forecast = carbon_obs
 
     elastic_summary = None
     if elasticity is not None:
@@ -1069,7 +1203,8 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                                     cfg_base.interval_s,
                                     budget_series=_elastic_budget_series(
                                         plan, T, elasticity,
-                                        cfg_base.interval_s))
+                                        cfg_base.interval_s),
+                                    carbon_forecast=ela_forecast)
         demand_one = eres.demand_served()
         demand_scale = 1.0          # already applied ahead of the layer
         elastic_summary = eres.summary()
@@ -1084,7 +1219,15 @@ def sweep_population_jax(policies: dict, family: SliceFamily, traces,
                                  state_gb=cfg_base.state_gb,
                                  demand_scale=demand_scale,
                                  n_rep=n_rep, traffic=run_traffic,
-                                 energy=run_energy), 0)
+                                 energy=run_energy,
+                                 carbon_obs=carbon_obs,
+                                 power_gap=gap_vec), 0)
+    fault_summary = None
+    if fault_ctx is not None:
+        fault_summary = fault_ctx.signal.summary()
+        if plan is not None and plan.failed_migrations is not None:
+            fault_summary["fault_failed_migrations_mean"] = float(
+                np.mean(plan.failed_migrations))
     return _aggregate_sweep_rows(policies, results, targets, n_tr, plan,
                                  traffic_summary, elastic_summary,
-                                 energy_summary)
+                                 energy_summary, fault_summary)

@@ -52,7 +52,14 @@ class SimResult:
 def simulate(policy, family: SliceFamily, util_trace: Sequence[float],
              carbon: CarbonIntensityProvider, cfg: SimConfig,
              demand_scale: float = 1.0,
-             migration: Optional[MigrationCostModel] = None) -> SimResult:
+             migration: Optional[MigrationCostModel] = None,
+             carbon_obs=None) -> SimResult:
+    """`carbon_obs` (optional) splits the signal plane from the billing
+    plane: the policy *decides* on the observed intensity (a provider,
+    or a per-epoch sequence aligned with `util_trace`) while emissions
+    are billed at the true `carbon` — the Carbon Containers controller
+    only ever sees its telemetry feed, and under stale/missing samples
+    the two diverge (see `repro.robustness`)."""
     mig = migration or MigrationCostModel()
     st = ContainerState(slice_idx=family.baseline_idx)
     st.dwell = 10**6
@@ -65,6 +72,12 @@ def simulate(policy, family: SliceFamily, util_trace: Sequence[float],
         t = n * dt
         demand = float(demand_raw) * demand_scale
         c = carbon.intensity(t)
+        if carbon_obs is None:
+            c_obs = c
+        elif hasattr(carbon_obs, "intensity"):
+            c_obs = carbon_obs.intensity(t)
+        else:
+            c_obs = float(carbon_obs[n])
         st.demand_integral += demand * dt
         st.elapsed_s += dt
         st.observe_demand(demand)
@@ -83,7 +96,7 @@ def simulate(policy, family: SliceFamily, util_trace: Sequence[float],
             _record(series, cfg, t, power * c / 1000.0, st, 0.0, demand, 0.0)
             continue
 
-        action: Action = policy.decide(family, st, demand, c,
+        action: Action = policy.decide(family, st, demand, c_obs,
                                        cfg.target_rate, cfg.epsilon)
 
         if action.kind == "suspend":
@@ -193,7 +206,7 @@ def sweep_population(policies, family: SliceFamily = None, traces=None,
                      demand_scale: float = 1.0,
                      backend: str = "scalar",
                      placement=None, traffic=None,
-                     elasticity=None, energy=None):
+                     elasticity=None, energy=None, faults=None):
     """Run a population sweep: every (policy x target x trace) combination.
 
     Preferred surface: pass a single `repro.core.spec.SweepSpec` as the
@@ -234,6 +247,12 @@ def sweep_population(policies, family: SliceFamily = None, traces=None,
     over the fleet's flexible load: demand is clamped by the virtual
     power cap, emissions are billed at the delivered mix's effective
     intensity, and rows gain the `energy_*` supply metrics.
+
+    `faults` (a `repro.robustness.FaultPlan`; fleet/jax backends only)
+    injects seeded signal-plane faults: the controller decides on a
+    degraded *observed* carbon feed while emissions stay billed at the
+    true one, migrations fail per the plan's mask, and power-telemetry
+    gaps accrue `unmetered_g`; rows gain the `fault_*` summaries.
     """
     from repro.core.spec import SweepSpec
     if isinstance(policies, SweepSpec):
@@ -247,14 +266,16 @@ def sweep_population(policies, family: SliceFamily = None, traces=None,
                                       targets, cfg_base,
                                       demand_scale=demand_scale,
                                       placement=placement, traffic=traffic,
-                                      elasticity=elasticity, energy=energy)
+                                      elasticity=elasticity, energy=energy,
+                                      faults=faults)
     if backend == "jax":
         from repro.core.fleet_jax import sweep_population_jax
         return sweep_population_jax(policies, family, traces, carbon,
                                     targets, cfg_base,
                                     demand_scale=demand_scale,
                                     placement=placement, traffic=traffic,
-                                    elasticity=elasticity, energy=energy)
+                                    elasticity=elasticity, energy=energy,
+                                    faults=faults)
     if placement is not None:
         raise ValueError("placement requires backend='fleet' or 'jax'")
     if traffic is not None:
@@ -263,6 +284,8 @@ def sweep_population(policies, family: SliceFamily = None, traces=None,
         raise ValueError("elasticity requires backend='fleet' or 'jax'")
     if energy is not None:
         raise ValueError("energy requires backend='fleet' or 'jax'")
+    if faults is not None:
+        raise ValueError("faults requires backend='fleet' or 'jax'")
     if backend != "scalar":
         raise ValueError(f"unknown sweep backend {backend!r}")
     rows = []

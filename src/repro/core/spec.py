@@ -60,6 +60,7 @@ class SweepSpec:
     traffic: object = None              # repro.traffic.TrafficConfig
     elasticity: object = None           # repro.core.elasticity.ElasticityConfig
     energy: object = None               # repro.energy.EnergyConfig
+    faults: object = None               # repro.robustness.FaultPlan
 
     def resolve_placement(self):
         """The placement engine (building one from a config), or None."""
@@ -93,7 +94,8 @@ class SweepSpec:
                                 placement=self.resolve_placement(),
                                 traffic=self.traffic,
                                 elasticity=self.elasticity,
-                                energy=self.energy)
+                                energy=self.energy,
+                                faults=self.faults)
         return SweepResult(rows=rows, backend=self.backend, spec=self)
 
 

@@ -4,7 +4,9 @@ Each cell is a named scenario — fleet churn (arrivals/departures), grid
 outages, correlated intensity shocks, migration failures injected
 through `repro.distributed.fault`, straggler-delayed suspend/resume via
 `repro.distributed.stragglers`, demand bursts replayed through
-`repro.workload.replay` — executed as one `SweepSpec` sweep with the
+`repro.workload.replay`, and signal-plane faults (telemetry blackout,
+flapping carbon feed, migration storms) injected through
+`repro.robustness` — executed as one `SweepSpec` sweep with the
 virtual energy supply enabled, on both array backends, with invariant
 checks:
 
@@ -40,6 +42,8 @@ from repro.core.policy import CarbonAgnosticPolicy, CarbonContainerPolicy
 from repro.core.simulator import SimConfig
 from repro.core.spec import SweepSpec, SweepResult
 from repro.energy.supply import EnergyConfig, GridEventConfig
+from repro.robustness import (CarbonFeedFaults, FaultPlan, MigrationFaults,
+                              PowerTelemetryFaults)
 
 CONSERVATION_TOL_W = 1e-6
 PARITY_TOL = 1e-6
@@ -50,12 +54,16 @@ class Scenario:
     """One stress cell: an event layer plus optional demand shaping.
 
     `shape_demand(traces, interval_s)` returns the stressed (T, n)
-    demand matrix (and may record scenario metadata in `meta`)."""
+    demand matrix (and may record scenario metadata in `meta`).
+    `faults` (a `repro.robustness.FaultPlan`) additionally degrades the
+    signal plane — stale/missing carbon telemetry, power-meter gaps,
+    failed migrations — through the sweep's fault injection."""
     name: str
     description: str
     energy: EnergyConfig
     shape_demand: Optional[Callable] = None
     meta: dict = field(default_factory=dict)
+    faults: Optional[object] = None
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +219,34 @@ def build_matrix(T: int, interval_s: float = 300.0) -> list:
                  EnergyConfig(events=calm), stragglers),
         Scenario("demand_burst", "replayed demand burst at solar peak",
                  EnergyConfig(events=calm), burst),
+        Scenario("telemetry_blackout", "carbon feed goes dark for a "
+                 "stretch + the power meter drops epochs; the "
+                 "degradation ladder rides hold -> prior -> floor",
+                 EnergyConfig(events=calm),
+                 faults=FaultPlan(
+                     carbon=CarbonFeedFaults(
+                         blackouts=((-1, T // 3, max(4, T // 8)),)),
+                     power=PowerTelemetryFaults(
+                         gaps=((T // 2, max(3, T // 16)),)),
+                     seed=23)),
+        Scenario("flapping_feed", "carbon telemetry flaps: random "
+                 "dropouts + a noisy window degrade every controller "
+                 "decision",
+                 EnergyConfig(events=calm),
+                 faults=FaultPlan(
+                     carbon=CarbonFeedFaults(
+                         dropout_prob=0.25,
+                         noise_windows=((-1, T // 4, max(6, T // 6),
+                                         0.2),)),
+                     seed=29)),
+        Scenario("migration_storm", "planned migrations fail in bulk; "
+                 "capped backoff must keep retries from thrashing",
+                 EnergyConfig(events=calm),
+                 faults=FaultPlan(
+                     migration=MigrationFaults(fail_prob=0.5,
+                                               backoff_base=1,
+                                               backoff_cap=8),
+                     seed=31)),
     ]
 
 
@@ -246,7 +282,8 @@ def run_scenario(sc: Scenario, T: int = 288, n_tr: int = 24,
                          sim=SimConfig(target_rate=0.0, interval_s=dt),
                          backend=backend,
                          placement=PlacementConfig(capacity=max(2, n_tr)),
-                         regions=regions, energy=sc.energy)
+                         regions=regions, energy=sc.energy,
+                         faults=sc.faults)
         results[backend] = spec.run()
     first: SweepResult = results[backends[0]]
     checks = {

@@ -1,0 +1,32 @@
+"""Signal-plane fault injection + graceful degradation.
+
+The enforcement loop everywhere else in this repo assumes a perfect
+signal plane: carbon-intensity telemetry is always fresh, power
+metering never drops samples, and every planned migration succeeds.
+This package makes those assumptions explicit and breakable — a frozen,
+seeded `FaultPlan` declares carbon-feed dropouts/staleness/noise
+windows, power-telemetry gaps, and migration failures, and the
+degradation ladder in `degrade` turns the true (T, R) region-intensity
+matrix into the *observed* signal the controller actually gets to see.
+
+Degraded signals are materialized host-side once, as plain NumPy
+arrays, so the scalar / NumPy-fleet / JAX backends consume identical
+floats (parity by construction). Emissions are always billed at the
+TRUE intensity; decisions run on the OBSERVED one — the gap between
+the two is the measurable overshoot cost of a degraded signal plane.
+"""
+from repro.robustness.faults import (CarbonFeedFaults, DegradeConfig,
+                                     FaultPlan, MigrationFaults,
+                                     PowerTelemetryFaults,
+                                     carbon_fault_masks,
+                                     migration_failure_mask,
+                                     power_gap_vector)
+from repro.robustness.degrade import (ObservedSignal, budget_violations,
+                                      observe_intensity)
+
+__all__ = [
+    "CarbonFeedFaults", "PowerTelemetryFaults", "MigrationFaults",
+    "DegradeConfig", "FaultPlan", "carbon_fault_masks",
+    "migration_failure_mask", "power_gap_vector", "ObservedSignal",
+    "observe_intensity", "budget_violations",
+]

@@ -108,13 +108,16 @@ def test_run_with_recovery_restores_from_checkpoint():
     assert len(job.losses) == 40
 
 
-def test_run_with_recovery_insufficient_survivors():
+def test_run_with_recovery_insufficient_survivors_aborts_gracefully():
     job = _Job()
     inj = FailureInjector(schedule={3: 7})
-    with pytest.raises(RuntimeError, match="insufficient"):
-        run_with_recovery(job, iter(range(100)), n_steps=10,
-                          devices=list(range(8)), injector=inj,
-                          checkpoint_every=2, min_devices=2)
+    out = run_with_recovery(job, iter(range(100)), n_steps=10,
+                            devices=list(range(8)), injector=inj,
+                            checkpoint_every=2, min_devices=2)
+    # partial results, not an exception: the completed work survives
+    assert out["aborted"] and "insufficient survivors" in out["abort_reason"]
+    assert out["final_step"] == 3             # where the job actually stopped
+    assert len(job.losses) == 3               # steps completed before abort
 
 
 def test_run_with_recovery_no_failures():
@@ -122,7 +125,47 @@ def test_run_with_recovery_no_failures():
     out = run_with_recovery(job, iter(range(100)), n_steps=12,
                             devices=list(range(4)), injector=None,
                             checkpoint_every=5)
-    assert out == {"recoveries": [], "final_step": 12, "devices_left": 4}
+    assert out == {"recoveries": [], "final_step": 12, "devices_left": 4,
+                   "aborted": False}
+
+
+def test_run_with_recovery_max_retries_exhaustion():
+    """A persistent failure at one step aborts after max_retries
+    consecutive recoveries, returning the partial results, with capped
+    exponential backoff between retries (recorded, not slept)."""
+    job = _Job()
+    inj = FailureInjector(schedule={25: 2}, persistent=True)
+    sleeps = []
+    out = run_with_recovery(job, iter(range(10_000)), n_steps=40,
+                            devices=list(range(16)), injector=inj,
+                            checkpoint_every=10, max_retries=3,
+                            backoff_base_s=1.0, backoff_cap_s=3.0,
+                            sleep_fn=sleeps.append)
+    assert out["aborted"] and "max_retries=3 exhausted" in out["abort_reason"]
+    assert len(out["recoveries"]) == 3        # the allowed retries all ran
+    assert out["final_step"] == 25            # parked at the failing step
+    # capped exponential: 2nd retry 1s, 3rd 2s (4th would cap at 3s)
+    assert sleeps == [1.0, 2.0]
+
+
+def test_run_with_recovery_transient_failures_reset_retry_budget():
+    """Distinct failing steps are separate incidents: each one-shot
+    failure recovers and the run completes without tripping max_retries."""
+    job = _Job()
+    inj = FailureInjector(schedule={15: 1, 25: 1, 35: 1})
+    out = run_with_recovery(job, iter(range(10_000)), n_steps=40,
+                            devices=list(range(16)), injector=inj,
+                            checkpoint_every=10, max_retries=1)
+    assert not out["aborted"]
+    assert out["final_step"] == 40
+    assert len(out["recoveries"]) == 3
+    assert len(job.losses) == 40
+
+
+def test_failure_injector_persistent_refires():
+    inj = FailureInjector(schedule={5: 2}, persistent=True)
+    assert inj.check(5) == 2
+    assert inj.check(5) == 2                  # re-arms on replay
 
 
 # ---------------------------------------------------------------------------

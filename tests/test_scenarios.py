@@ -41,8 +41,28 @@ def test_scenario_backend_parity(name):
 
 def test_matrix_covers_required_stressors():
     assert {"fleet_churn", "grid_outage", "intensity_shock",
-            "migration_failures", "stragglers",
-            "demand_burst"} <= set(_NAMES)
+            "migration_failures", "stragglers", "demand_burst",
+            "telemetry_blackout", "flapping_feed",
+            "migration_storm"} <= set(_NAMES)
+
+
+def test_telemetry_blackout_degrades_and_leaves_meter_blind():
+    out = sc.run_scenario(_cell("telemetry_blackout"), T=_T, n_tr=_N,
+                          targets=(40.0,), backends=("fleet",))
+    rows = out["results"]["fleet"]
+    assert rows.col("fault_stale_frac").max() > 0.0
+    # a blackout longer than the hold TTL must push past tier-1 hold
+    assert (rows.col("fault_prior_frac").max()
+            + rows.col("fault_floor_frac").max()) > 0.0
+    # the power-meter gap accrues unmetered emissions
+    assert rows.col("fault_unmetered_g_mean").max() > 0.0
+
+
+def test_migration_storm_fails_and_retries():
+    out = sc.run_scenario(_cell("migration_storm"), T=_T, n_tr=_N,
+                          targets=(40.0,), backends=("fleet",))
+    rows = out["results"]["fleet"]
+    assert rows.col("fault_failed_migrations_mean").max() > 0.0
 
 
 def test_grid_outage_scenario_actually_islands():
